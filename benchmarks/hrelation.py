@@ -1,0 +1,93 @@
+"""Paper Table 3: measure the BSP machine constants (g, l) by timing
+total exchanges — ``lpf_probe``'s online-benchmark mode.
+
+For word sizes w we run total exchanges of h bytes per process, fit
+T(h) = g*h + l per the paper's estimators
+    g ~ (T(n_max) - T(2p)) / (n_max - 2p)
+    l ~ max(T(0), 2 T(p) - T(2p))
+and report (g, l) normalised by the memcpy rate r, as Table 3 does.
+The CPU backend numbers calibrate the *methodology*; the v5e column is
+the hardware-model table the dry-run probe uses.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import bsp, core as lpf
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _exchange_fn(mesh, n_elems):
+    """Total exchange of n_elems f32 per process (h = 4*n_elems bytes)."""
+    def spmd(ctx, s, p, x):
+        return bsp.alltoall(ctx, x)
+
+    def run(x):
+        return lpf.exec_(mesh, spmd, x, in_specs=P(), out_specs=P("x"))
+
+    p = int(np.prod(list(mesh.shape.values())))
+    pad = max(p, n_elems - n_elems % p) if n_elems % p else n_elems
+    x = jnp.arange(max(pad, p), dtype=jnp.float32)
+    return jax.jit(run), x
+
+
+def measure_constants(mesh, n_max_bytes=1 << 22):
+    p = int(np.prod(list(mesh.shape.values())))
+    # memcpy rate r
+    big = jnp.arange(1 << 22, dtype=jnp.float32)
+    t_cp = _time(jax.jit(lambda a: a + 1.0), big)
+    r = t_cp / big.nbytes                      # s/byte
+
+    def T(h_bytes):
+        n = max(p, h_bytes // 4)
+        fn, x = _exchange_fn(mesh, n)
+        return _time(fn, x)
+
+    t0 = T(0)
+    tp = T(4 * p)
+    t2p = T(8 * p)
+    tmax = T(n_max_bytes)
+    g = (tmax - t2p) / (n_max_bytes - 8 * p)
+    l = max(t0, 2 * tp - t2p)
+    return {"p": p, "r_s_per_byte": r, "g_s_per_byte": g, "l_s": l,
+            "g_norm": g / r, "l_words": l / max(g * 8, 1e-30)}
+
+
+def main(csv=True):
+    rows = []
+    for p in (4, 8):
+        mesh = jax.make_mesh((p,), ("x",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        m = measure_constants(mesh)
+        rows.append(("hrelation_cpu", p, m["g_s_per_byte"], m["l_s"],
+                     m["g_norm"], m["l_words"]))
+    # the v5e model column (what lpf_probe serves on the target)
+    for axes in ({"data": 16, "model": 16},
+                 {"pod": 2, "data": 16, "model": 16}):
+        mm = lpf.probe(axes, lpf.TPU_V5E)
+        rows.append((f"probe_v5e_p{mm.p}", mm.p, mm.g, mm.l,
+                     mm.g / mm.r, mm.l / max(mm.g * 8, 1e-30)))
+    if csv:
+        print("name,p,g_s_per_byte,l_s,g_norm,l_words")
+        for r_ in rows:
+            print(",".join(str(x) for x in r_))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""§Roofline: derive the three terms per (arch x shape x mesh) from the
+dry-run artifacts (experiments/dryrun/*.json).
+
+  compute    = HLO_FLOPs(device) / peak_FLOPs
+  memory     = HLO_traffic(device) / HBM_bw   (loop-aware unfused-bytes
+               census of the compiled HLO: an upper bound that XLA
+               fusion tightens on the real target)
+  collective = collective_bytes(device) / link_bw     (ICI; the pod axis
+               contribution is reported separately from the multi mesh)
+
+HLO_FLOPs / bytes / collective_bytes are the scan-calibrated values (see
+launch/dryrun for the extrapolation); per-device where cost_analysis is
+per-partition (verified against analytic model flops).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core import TPU_V5E
+from repro.core.hlo_analysis import RooflineTerms
+
+
+def load_terms(art: dict) -> RooflineTerms:
+    hw = TPU_V5E
+    link = hw.link("dcn").bw if art["mesh"] == "multi" else hw.link("ici").bw
+    return RooflineTerms(
+        arch=art["arch"], shape=art["shape"], mesh=art["mesh"],
+        chips=art["chips"],
+        hlo_flops=art["hlo_flops"],
+        hlo_bytes=art["hlo_bytes"],
+        collective_bytes=art["collective_bytes"],
+        model_flops=art["model_flops"],
+        peak_flops=hw.peak_flops_bf16,
+        hbm_bw=hw.hbm_bw,
+        link_bw=hw.link("ici").bw,
+        memory_per_device=art["memory"]["per_device_bytes"])
+
+
+def main(csv=True, art_dir="experiments/dryrun"):
+    rows = []
+    print(RooflineTerms.header())
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        if art.get("status") != "ok":
+            arch, shape, mesh = art["arch"], art["shape"], art["mesh"]
+            print(f"{arch:<24}{shape:<13}{mesh:<10}{'-- skipped: ' + art.get('reason', '')}")
+            continue
+        t = load_terms(art)
+        print(t.row())
+        rows.append(t)
+    if rows:
+        worst = min(rows, key=lambda t: t.roofline_fraction)
+        collb = max(rows, key=lambda t: t.t_collective
+                    / max(t.t_bound, 1e-12))
+        print(f"\nworst roofline fraction: {worst.arch}/{worst.shape}"
+              f"/{worst.mesh} at {worst.roofline_fraction:.2%}")
+        print(f"most collective-bound:  {collb.arch}/{collb.shape}"
+              f"/{collb.mesh}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

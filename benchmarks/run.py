@@ -1,0 +1,53 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+``python -m benchmarks.run [--fast]`` prints each benchmark's CSV block:
+  hrelation  -> paper Table 3 (g, l constants; probe's v5e model column)
+  messages   -> paper Fig. 2 (n-message compliance, direct vs Bruck)
+  fft        -> paper Fig. 3 (immortal FFT vs vendor FFT)
+  pagerank   -> paper Table 4 (LPF vs pure-dataflow PageRank)
+  roofline   -> §Roofline terms from the dry-run artifacts (if present)
+"""
+
+import argparse
+import os
+import sys
+import traceback
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sizes (CI-friendly)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import fft, hrelation, messages, pagerank, roofline
+
+    jobs = {
+        "hrelation": lambda: hrelation.main(),
+        "messages": lambda: messages.main(),
+        "fft": lambda: fft.main(max_log2=14 if args.fast else 18),
+        "pagerank": lambda: pagerank.main(
+            sizes=((1 << 10, 6),) if args.fast
+            else ((1 << 12, 6), (1 << 14, 6))),
+        "roofline": lambda: roofline.main(),
+    }
+    failed = []
+    for name, job in jobs.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== {name} =====")
+        try:
+            job()
+        except Exception:                      # report, keep going
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Immortal FFT in use: distributed spectral filtering.
+
+A noisy multi-tone signal is transformed with the LPF BSP FFT (paper
+§4.2, Inda–Bisseling), low-pass filtered in the frequency domain, and
+transformed back — all on 8 SPMD processes with one total exchange per
+transform.  The ledger shows the exact h-relation the immortal analysis
+promises: (n/p)(p-1)/p elements per process per exchange.
+
+Run:  PYTHONPATH=src python examples/fft_spectral.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algorithms import bsp_fft, fft_h_bytes
+from repro.core import probe
+
+N = 1 << 14
+CUTOFF = 200
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    t = np.arange(N) / N
+    clean = (np.sin(2 * np.pi * 50 * t) + 0.5 * np.sin(2 * np.pi * 120 * t))
+    noisy = clean + 0.8 * rng.standard_normal(N)
+
+    spectrum, ledger = bsp_fft(mesh, jnp.asarray(noisy, jnp.complex64),
+                               return_ledger=True)
+    keep = np.zeros(N)
+    keep[:CUTOFF] = 1.0
+    keep[-CUTOFF:] = 1.0
+    filtered = bsp_fft(mesh, spectrum * jnp.asarray(keep), inverse=True)
+    recovered = np.real(np.asarray(filtered))
+
+    err_before = np.sqrt(np.mean((noisy - clean) ** 2))
+    err_after = np.sqrt(np.mean((recovered - clean) ** 2))
+    print(f"n = {N}, p = 8")
+    print(f"RMS error before filtering: {err_before:.3f}")
+    print(f"RMS error after filtering:  {err_after:.3f}")
+    assert err_after < err_before / 2
+
+    print(f"\npredicted immortal h-relation: {fft_h_bytes(N, 8)} bytes")
+    print(f"ledger h-relation:             {ledger.h_bytes} bytes")
+    print(ledger.report(probe({"x": 8})))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: LPF-on-JAX multi-pod training/inference framework."""

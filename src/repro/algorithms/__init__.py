@@ -1,0 +1,14 @@
+"""Immortal algorithms (paper §4): the BSP FFT and the GraphBLAS-lite
+PageRank, plus their baselines."""
+
+from .fft import bsp_fft, bsp_fft_spmd, fft_flops, fft_h_bytes
+from .graphs import PartitionedGraph, banded_graph, partition_graph, rmat_graph
+from .pagerank import (dataflow_pagerank, lpf_pagerank, pagerank_spmd,
+                       reference_pagerank)
+
+__all__ = [
+    "bsp_fft", "bsp_fft_spmd", "fft_flops", "fft_h_bytes",
+    "PartitionedGraph", "banded_graph", "partition_graph", "rmat_graph",
+    "dataflow_pagerank", "lpf_pagerank", "pagerank_spmd",
+    "reference_pagerank",
+]

@@ -1,0 +1,3 @@
+"""Checkpointing: atomic, async, elastic."""
+from .store import AsyncCheckpointer, latest_step, restore, save
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

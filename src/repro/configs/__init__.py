@@ -1,0 +1,35 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module exposes ``config(ep_degree)`` (the exact published geometry)
+and ``smoke_config()`` (a reduced same-family config for CPU tests).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from . import (deepseek_v3_671b, gemma2_9b, granite_moe_3b, jamba_v01_52b,
+               llama3_2_1b, llava_next_mistral_7b, mamba2_130m, qwen1_5_110b,
+               qwen3_14b, whisper_base)
+from .shapes import SHAPES, ShapeCell, applicable, input_specs
+
+_MODULES = (qwen1_5_110b, llama3_2_1b, qwen3_14b, gemma2_9b, granite_moe_3b,
+            deepseek_v3_671b, mamba2_130m, llava_next_mistral_7b,
+            jamba_v01_52b, whisper_base)
+
+REGISTRY: Dict[str, Tuple[Callable, Callable]] = {
+    m.ARCH: (m.config, m.smoke_config) for m in _MODULES
+}
+
+ARCHS = tuple(REGISTRY)
+
+
+def get_config(arch: str, *, smoke: bool = False, ep_degree: int = 16):
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(REGISTRY)}")
+    full, small = REGISTRY[arch]
+    return small() if smoke else full(ep_degree=ep_degree)
+
+
+__all__ = ["REGISTRY", "ARCHS", "get_config", "SHAPES", "ShapeCell",
+           "applicable", "input_specs"]

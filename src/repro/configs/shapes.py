@@ -1,0 +1,90 @@
+"""The assigned input-shape set and per-(arch x shape) input specs.
+
+Four cells per architecture:
+  train_4k     seq 4,096   global_batch 256   (train_step)
+  prefill_32k  seq 32,768  global_batch 32    (serve prefill forward)
+  decode_32k   seq 32,768  global_batch 128   (serve_step, 1 new token)
+  long_500k    seq 524,288 global_batch 1     (decode; sub-quadratic only)
+
+``decode_*``/``long_*`` lower ``serve_step`` — one token against a KV/SSM
+cache of ``seq_len`` — not ``train_step``.  ``long_500k`` is skipped for
+pure full-attention architectures (see DESIGN.md §4) and runs for the
+SSM/hybrid ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeCell", "SHAPES", "input_specs", "applicable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+#: archs allowed to run long_500k (sub-quadratic sequence mixing)
+SUBQUADRATIC = {"mamba2-130m", "jamba-v0.1-52b"}
+
+
+def applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch: 500k decode skipped (DESIGN.md §4)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: the batch pytree for ``train_step``/``prefill``.
+    decode: {token, pos} (+ enc_out for enc-dec); caches are built
+    separately by ``repro.models.lm.init_caches`` via eval_shape.
+    """
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    cdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        cfg.compute_dtype]
+
+    if cell.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.modality == "vision":
+            P = cfg.stub_prefix
+            batch["embeds"] = _sds((B, P, cfg.d_model), cdt)
+            batch["tokens"] = _sds((B, S - P), i32)
+            batch["labels"] = _sds((B, S - P), i32)
+        elif cfg.modality == "audio":
+            batch["frames"] = _sds((B, S, cfg.d_model), cdt)
+            batch["tokens"] = _sds((B, S), i32)
+            batch["labels"] = _sds((B, S), i32)
+        else:
+            batch["tokens"] = _sds((B, S), i32)
+            batch["labels"] = _sds((B, S), i32)
+        return batch
+
+    specs = {"token": _sds((B,), i32), "pos": _sds((), i32)}
+    if cfg.encoder_groups:
+        # encoder ran at prefill; decode consumes its output states
+        specs["enc_out"] = _sds((B, 1500, cfg.d_model), cdt)
+    return specs

@@ -1,0 +1,43 @@
+"""LPF core — the paper's twelve primitives on JAX/XLA.
+
+==========================  ==============================================
+Paper primitive             This module
+==========================  ==============================================
+``lpf_exec``                :func:`repro.core.exec_`
+``lpf_hook``                :func:`repro.core.hook`
+``lpf_rehook``              :func:`repro.core.rehook`
+``lpf_register_local``      :meth:`LPFContext.register_local`
+``lpf_register_global``     :meth:`LPFContext.register_global`
+``lpf_deregister``          :meth:`LPFContext.deregister`
+``lpf_resize_memory_...``   :meth:`LPFContext.resize_memory_register`
+``lpf_resize_message_...``  :meth:`LPFContext.resize_message_queue`
+``lpf_put``                 :meth:`LPFContext.put`
+``lpf_get``                 :meth:`LPFContext.get`
+``lpf_sync``                :meth:`LPFContext.sync`
+``lpf_probe``               :meth:`LPFContext.probe` / :func:`probe`
+==========================  ==============================================
+"""
+
+from .attrs import CompressSpec, LPF_SYNC_DEFAULT, SyncAttributes
+from .context import LPFContext, exec_, hook, rehook
+from .cost import CostLedger, SuperstepCost
+from .errors import (LPF_ERR_FATAL, LPF_ERR_OUT_OF_MEMORY, LPF_SUCCESS,
+                     LPFCapacityError, LPFError, LPFFatalError)
+from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
+                           roofline_terms)
+from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
+                      LPFMachine, probe)
+from .memslot import Slot, SlotRegistry
+from .sync import Msg
+
+__all__ = [
+    "LPFContext", "exec_", "hook", "rehook",
+    "SyncAttributes", "CompressSpec", "LPF_SYNC_DEFAULT",
+    "CostLedger", "SuperstepCost",
+    "LPFError", "LPFCapacityError", "LPFFatalError",
+    "LPF_SUCCESS", "LPF_ERR_OUT_OF_MEMORY", "LPF_ERR_FATAL",
+    "HardwareModel", "LinkModel", "LPFMachine", "probe",
+    "TPU_V5E", "TPU_V5P", "CPU_HOST",
+    "Slot", "SlotRegistry", "Msg",
+    "CollectiveStats", "RooflineTerms", "parse_collectives", "roofline_terms",
+]

@@ -1,0 +1,57 @@
+"""Sync/message attributes — the paper's extension point (S2.1, S6).
+
+``lpf_sync`` accepts attributes that let an implementation relax
+guarantees for better effective (g, l).  We realise the ones the paper
+names as future work plus the ones the framework needs:
+
+* ``method``    — h-relation execution algorithm: ``auto`` | ``direct``
+                  (paper's direct all-to-all; m rounds of permutations) |
+                  ``bruck`` (randomised-Bruck flavour: ceil(log2 p) rounds,
+                  O(log p) x volume) | ``valiant`` (two-phase randomised
+                  routing for skewed relations).
+* ``no_conflict`` — caller asserts no overlapping writes: skips CRCW
+                  arbitration ordering so rounds pack tighter (lower l).
+* ``compress``  — quantise payloads (e.g. int8) before the wire: lower
+                  effective g at a precision cost; used with error
+                  feedback by the gradient-sync collectives.
+* ``stale``     — tolerated staleness in supersteps; interpreted by the
+                  runtime's local-SGD / stale-synchronous outer loop
+                  (paper's future-work reference [16]), not by core sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+__all__ = ["CompressSpec", "SyncAttributes", "LPF_SYNC_DEFAULT", "LPF_MSG_DEFAULT"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressSpec:
+    """Payload quantisation spec (applies to floating slots only)."""
+
+    bits: int = 8               # 8 -> int8 symmetric quantisation
+    stochastic: bool = False    # stochastic rounding (needs a key per sync)
+
+    @property
+    def ratio(self) -> float:
+        return self.bits / 32.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncAttributes:
+    method: Literal["auto", "direct", "bruck", "valiant"] = "auto"
+    no_conflict: bool = False
+    compress: Optional[CompressSpec] = None
+    stale: int = 0
+    #: two-phase Valiant routing seed (static; randomness is configuration,
+    #: not run-time state, so the schedule stays compile-time static).
+    valiant_seed: int = 0x5DEECE66D
+
+    def replace(self, **kw) -> "SyncAttributes":
+        return dataclasses.replace(self, **kw)
+
+
+LPF_SYNC_DEFAULT = SyncAttributes()
+LPF_MSG_DEFAULT = object()  # placeholder for per-message attributes

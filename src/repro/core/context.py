@@ -1,0 +1,280 @@
+"""LPF contexts — ``lpf_exec``, ``lpf_hook``, ``lpf_rehook`` and the
+twelve-primitive surface.
+
+A *context* is a set of mesh axes inside an SPMD (``shard_map``) region.
+``exec_`` launches an SPMD function on a mesh (the paper's process
+spawning); ``hook`` runs an SPMD function *inside an existing traced
+parallel program* — the interoperability mechanism that let the paper call
+LPF algorithms from Spark lets us call them from any jit-compiled JAX
+program, including a training step.  ``rehook`` re-scopes to a pristine
+context, optionally over a sub-set of the axes (the paper's
+library-encapsulation mechanism).
+
+The context is imperative at trace time (mirroring the C API): ``put`` /
+``get`` stage messages, ``sync`` compiles and executes the superstep, slot
+values are read back with ``value`` / ``tensor``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .attrs import LPF_SYNC_DEFAULT, SyncAttributes
+from .cost import CostLedger
+from .errors import LPFCapacityError, LPFFatalError
+from .machine import LPFMachine, HardwareModel, TPU_V5E, probe as _probe
+from .memslot import Slot, SlotRegistry
+from .sync import Msg, execute_sync
+
+__all__ = ["LPFContext", "exec_", "hook", "rehook", "LPF_ROOT_AXES"]
+
+PidFn = Union[int, Sequence[int], Callable[[int], int]]
+LPF_ROOT_AXES: Tuple[str, ...] = ()
+
+
+def _per_pid(value: PidFn, p: int, name: str) -> List[int]:
+    if callable(value):
+        return [int(value(s)) for s in range(p)]
+    if isinstance(value, (int, np.integer)):
+        return [int(value)] * p
+    out = [int(v) for v in value]
+    if len(out) != p:
+        raise LPFFatalError(f"{name} table must have length p={p}")
+    return out
+
+
+class LPFContext:
+    """The LPF state of one SPMD region (paper: ``lpf_t``)."""
+
+    def __init__(self, axes: Sequence[str] = LPF_ROOT_AXES, *,
+                 hardware: HardwareModel = TPU_V5E,
+                 _parent: Optional["LPFContext"] = None):
+        self.axes: Tuple[str, ...] = tuple(axes)
+        if self.axes:
+            self.p: int = int(lax.psum(1, self.axes if len(self.axes) > 1
+                                       else self.axes[0]))
+            self.pid = lax.axis_index(self.axes if len(self.axes) > 1
+                                      else self.axes[0])
+        else:
+            self.p = 1
+            self.pid = jnp.zeros((), jnp.int32)
+        self.hardware = hardware
+        self.registry = SlotRegistry(capacity=0)
+        self.ledger = CostLedger()
+        self._queue: List[Msg] = []
+        self._queue_capacity = 0
+        self._scratch: Optional[Slot] = None
+        self._parent = _parent
+        self._on_hold = False
+
+    # ------------------------------------------------------------------
+    # capacity management: lpf_resize_message_queue / _memory_register
+    # ------------------------------------------------------------------
+    def resize_message_queue(self, n_msgs: int,
+                             valiant_payload: int = 0,
+                             payload_dtype=jnp.float32) -> None:
+        """Reserve queue capacity (O(N) as per the paper).  When
+        ``valiant_payload`` > 0 a scratch slot of that many elements is
+        provisioned for two-phase routing."""
+        if n_msgs < 0:
+            raise LPFFatalError("negative queue capacity")
+        self._queue_capacity = n_msgs
+        if valiant_payload > 0:
+            if self.registry.capacity < self.registry.n_active + 1:
+                self.registry.resize(self.registry.n_active + 1)
+            self._scratch = self.registry.register(
+                "__lpf_valiant_scratch", jnp.zeros(valiant_payload,
+                                                   payload_dtype), "global")
+
+    def resize_memory_register(self, n_slots: int) -> None:
+        reserve = 1 if self._scratch is not None else 0
+        self.registry.resize(n_slots + reserve)
+
+    # ------------------------------------------------------------------
+    # registration: lpf_register_{global,local}, lpf_deregister
+    # ------------------------------------------------------------------
+    def register_global(self, name: str, value, flatten: bool = True) -> Slot:
+        return self.registry.register(name, value, "global", flatten)
+
+    def register_local(self, name: str, value, flatten: bool = True) -> Slot:
+        return self.registry.register(name, value, "local", flatten)
+
+    def deregister(self, slot: Slot) -> None:
+        self.registry.deregister(slot)
+
+    # ------------------------------------------------------------------
+    # staging: lpf_put / lpf_get
+    # ------------------------------------------------------------------
+    def _stage(self, msgs: List[Msg]) -> None:
+        if len(self._queue) + len(msgs) > self._queue_capacity:
+            raise LPFCapacityError(
+                f"message queue capacity {self._queue_capacity} exceeded "
+                f"({len(self._queue)} staged + {len(msgs)} new); call "
+                f"resize_message_queue first")
+        self._queue.extend(msgs)
+
+    def put(self, src_slot: Slot, dst_slot: Slot, *, to: PidFn,
+            src_off: PidFn = 0, dst_off: PidFn = 0,
+            size: Optional[PidFn] = None,
+            where: Optional[Callable[[int], bool]] = None) -> None:
+        """Stage a put from every process ``s`` to process ``to(s)``.
+
+        Offsets/sizes may be ints (uniform), tables, or functions of the
+        *sending* pid — all static, as BSP supersteps declare their
+        h-relation up front.  ``where`` statically masks which pids
+        participate.  O(1) per message, no communication (paper Fig. 1).
+        """
+        if size is None:
+            size = src_slot.size
+        soff = _per_pid(src_off, self.p, "src_off")
+        doff = _per_pid(dst_off, self.p, "dst_off")
+        dsts = _per_pid(to, self.p, "to")
+        sizes = _per_pid(size, self.p, "size")
+        msgs = [Msg(s, dsts[s], src_slot, soff[s], dst_slot, doff[s],
+                    sizes[s], origin="put")
+                for s in range(self.p)
+                if (where is None or where(s)) and sizes[s] > 0]
+        self._stage(msgs)
+
+    def get(self, src_slot: Slot, dst_slot: Slot, *, frm: PidFn,
+            src_off: PidFn = 0, dst_off: PidFn = 0,
+            size: Optional[PidFn] = None,
+            where: Optional[Callable[[int], bool]] = None) -> None:
+        """Stage a get: every process ``s`` reads from ``frm(s)``.
+
+        Tables are indexed by the *destination* pid ``s`` (the caller);
+        the message table is globally known so a get is a put issued from
+        the remote side."""
+        if size is None:
+            size = src_slot.size
+        soff = _per_pid(src_off, self.p, "src_off")
+        doff = _per_pid(dst_off, self.p, "dst_off")
+        srcs = _per_pid(frm, self.p, "frm")
+        sizes = _per_pid(size, self.p, "size")
+        msgs = [Msg(srcs[s], s, src_slot, soff[s], dst_slot, doff[s],
+                    sizes[s], origin="get")
+                for s in range(self.p)
+                if (where is None or where(s)) and sizes[s] > 0]
+        self._stage(msgs)
+
+    def put_msgs(self, msgs: Sequence[Tuple[int, int, Slot, int, Slot,
+                                            int, int]]) -> None:
+        """Stage an explicit message table [(src, dst, src_slot, src_off,
+        dst_slot, dst_off, size), ...] — the fully general h-relation."""
+        self._stage([Msg(*m) for m in msgs])
+
+    # ------------------------------------------------------------------
+    # the fence: lpf_sync
+    # ------------------------------------------------------------------
+    def sync(self, attrs: SyncAttributes = LPF_SYNC_DEFAULT,
+             label: str = "") -> None:
+        label = label or f"superstep[{self.ledger.supersteps}]"
+        cost = execute_sync(self.registry, self._queue, self.p, self.axes,
+                            self.pid, attrs, label, scratch=self._scratch)
+        self.ledger.add(cost)
+        self._queue = []
+
+    # ------------------------------------------------------------------
+    # introspection: lpf_probe
+    # ------------------------------------------------------------------
+    def probe(self, axis_sizes: Optional[dict] = None) -> LPFMachine:
+        if axis_sizes is None:
+            if not self.axes:
+                axis_sizes = {}
+            else:
+                axis_sizes = {a: int(lax.psum(1, a)) for a in self.axes}
+        return _probe(axis_sizes, self.hardware)
+
+    # ------------------------------------------------------------------
+    # local access (between supersteps)
+    # ------------------------------------------------------------------
+    def value(self, slot: Slot) -> jnp.ndarray:
+        return self.registry.value(slot)
+
+    def tensor(self, slot: Slot) -> jnp.ndarray:
+        return self.registry.tensor(slot)
+
+    def write(self, slot: Slot, value) -> None:
+        """Local compute step writing a slot (allowed between supersteps)."""
+        value = jnp.asarray(value).reshape(-1).astype(slot.dtype)
+        self.registry.set_value(slot, value)
+
+    # convenience mirrors of the C API's context queries
+    @property
+    def nprocs(self) -> int:
+        return self.p
+
+
+@dataclasses.dataclass
+class _Args:
+    """``lpf_args_t``: arbitrary input/output passing."""
+
+    input: Any = None
+    output: Any = None
+
+
+def hook(axes: Sequence[str], spmd: Callable, args: Any = None, *,
+         hardware: HardwareModel = TPU_V5E,
+         parent: Optional[LPFContext] = None) -> Any:
+    """``lpf_hook``: run an LPF SPMD function inside the *current* parallel
+    environment (any traced program already under a mesh).  Returns the
+    function's output.  O(1) setup — no processes are spawned."""
+    ctx = LPFContext(axes, hardware=hardware, _parent=parent)
+    return spmd(ctx, ctx.pid, ctx.p, args)
+
+
+def rehook(ctx: LPFContext, spmd: Callable, args: Any = None, *,
+           axes: Optional[Sequence[str]] = None) -> Any:
+    """``lpf_rehook``: temporarily replace an active context with a
+    pristine one (optionally over a sub-set of its axes) — the paper's
+    sub-library encapsulation.  The parent context is on hold while the
+    sub-program runs (active contexts are disjoint)."""
+    sub_axes = tuple(axes) if axes is not None else ctx.axes
+    for a in sub_axes:
+        if a not in ctx.axes:
+            raise LPFFatalError(f"rehook axis {a!r} not in parent context")
+    ctx._on_hold = True
+    try:
+        return hook(sub_axes, spmd, args, hardware=ctx.hardware, parent=ctx)
+    finally:
+        ctx._on_hold = False
+
+
+def exec_(mesh: jax.sharding.Mesh, spmd: Callable, args: Any = None, *,
+          axes: Optional[Sequence[str]] = None,
+          in_specs: Any = None, out_specs: Any = P(),
+          hardware: HardwareModel = TPU_V5E,
+          jit: bool = True,
+          return_ledger: bool = False) -> Any:
+    """``lpf_exec``: launch ``spmd(ctx, s, p, args)`` on ``mesh``.
+
+    ``args`` are replicated by default (``in_specs``) and outputs are
+    expected replicated (``out_specs=P()``), mirroring the C API's
+    broadcast args; pass explicit specs for distributed I/O.  With
+    ``return_ledger=True`` also returns the cost ledger recorded at trace
+    time, for compliance checking."""
+    axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    ledger_box: List[CostLedger] = []
+
+    def wrapped(a):
+        ctx = LPFContext(axes, hardware=hardware)
+        ledger_box.append(ctx.ledger)
+        return spmd(ctx, ctx.pid, ctx.p, a)
+
+    if in_specs is None:
+        in_specs = jax.tree.map(lambda _: P(), args)
+    fn = jax.shard_map(wrapped, mesh=mesh, in_specs=(in_specs,),
+                       out_specs=out_specs, check_vma=False)
+    if jit:
+        fn = jax.jit(fn)
+    out = fn(args)
+    if return_ledger:
+        return out, (ledger_box[0] if ledger_box else CostLedger())
+    return out

@@ -1,0 +1,84 @@
+"""BSP cost accounting — every superstep's h-relation, rounds and bytes.
+
+Model compliance is only auditable if the layer itself can say what it
+promised.  Each ``lpf_sync`` appends a :class:`SuperstepCost` record with
+its h-relation (max over processes of bytes sent/received), the number of
+collective rounds issued and the wire bytes actually scheduled (including
+round padding and Bruck volume inflation).  The compliance checker then
+verifies the *compiled HLO* matches the ledger, and the §Roofline report
+feeds off the same records.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from .machine import LPFMachine
+
+__all__ = ["SuperstepCost", "CostLedger"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepCost:
+    label: str
+    h_bytes: int          # BSP h-relation of the *requested* pattern (bytes)
+    wire_bytes: int       # bytes actually scheduled per process (max), incl. padding
+    total_wire_bytes: int # sum over processes of bytes on the wire
+    rounds: int           # collective launches issued
+    n_msgs: int           # messages in the superstep
+    method: str           # direct | bruck | valiant | fused | noop
+
+    def predicted_seconds(self, machine: LPFMachine) -> float:
+        return self.wire_bytes * machine.g + self.rounds * machine.l
+
+
+class CostLedger:
+    """Per-context append-only log of superstep costs."""
+
+    def __init__(self) -> None:
+        self.records: List[SuperstepCost] = []
+
+    def add(self, record: SuperstepCost) -> None:
+        self.records.append(record)
+
+    # -- aggregate views --------------------------------------------------
+    @property
+    def h_bytes(self) -> int:
+        return sum(r.h_bytes for r in self.records)
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(r.wire_bytes for r in self.records)
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(r.total_wire_bytes for r in self.records)
+
+    @property
+    def rounds(self) -> int:
+        return sum(r.rounds for r in self.records)
+
+    @property
+    def supersteps(self) -> int:
+        return len(self.records)
+
+    def predicted_seconds(self, machine: LPFMachine) -> float:
+        return sum(r.predicted_seconds(machine) for r in self.records)
+
+    def report(self, machine: Optional[LPFMachine] = None) -> str:
+        lines = [f"{'label':<28}{'method':<9}{'h(B)':>12}{'wire(B)':>12}"
+                 f"{'rounds':>8}{'msgs':>7}"
+                 + (f"{'T_pred(us)':>12}" if machine else "")]
+        for r in self.records:
+            line = (f"{r.label:<28}{r.method:<9}{r.h_bytes:>12}"
+                    f"{r.wire_bytes:>12}{r.rounds:>8}{r.n_msgs:>7}")
+            if machine:
+                line += f"{r.predicted_seconds(machine) * 1e6:>12.2f}"
+            lines.append(line)
+        total = (f"{'TOTAL':<28}{'':<9}{self.h_bytes:>12}{self.wire_bytes:>12}"
+                 f"{self.rounds:>8}{sum(r.n_msgs for r in self.records):>7}")
+        if machine:
+            total += f"{self.predicted_seconds(machine) * 1e6:>12.2f}"
+        lines.append(total)
+        return "\n".join(lines)

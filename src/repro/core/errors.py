@@ -1,0 +1,46 @@
+"""LPF error semantics mapped to the traced-JAX world.
+
+The paper distinguishes *success*, *user-mitigable* errors (no side
+effects; e.g. out-of-memory), and *fatal* errors.  In a traced SPMD
+program the staging of communication happens at trace time, so capacity
+violations (`lpf_resize_*` bounds) surface as mitigable Python exceptions
+at trace time — before any communication is issued, hence side-effect
+free, exactly as the paper requires.  Fatal errors (malformed h-relations
+that can never execute) are :class:`LPFFatalError`.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "LPF_SUCCESS",
+    "LPF_ERR_OUT_OF_MEMORY",
+    "LPF_ERR_FATAL",
+    "LPFError",
+    "LPFCapacityError",
+    "LPFFatalError",
+]
+
+LPF_SUCCESS = 0
+LPF_ERR_OUT_OF_MEMORY = 1   # user-mitigable, guaranteed no side effects
+LPF_ERR_FATAL = 2
+
+
+class LPFError(Exception):
+    """Base class for LPF errors."""
+
+    code = LPF_ERR_FATAL
+
+
+class LPFCapacityError(LPFError):
+    """Mitigable error: a reserved capacity (message queue / memory
+    register) would be exceeded.  Raised *before* any state change, so the
+    caller may ``lpf_resize_*`` and retry — the paper's mitigable
+    out-of-memory contract."""
+
+    code = LPF_ERR_OUT_OF_MEMORY
+
+
+class LPFFatalError(LPFError):
+    """Non-mitigable error (malformed message, unregistered slot, ...)."""
+
+    code = LPF_ERR_FATAL

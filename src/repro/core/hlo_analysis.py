@@ -1,0 +1,360 @@
+"""HLO/StableHLO introspection: collective bytes, op census, roofline terms.
+
+This is the measurement half of model compliance.  The cost ledger says
+what the LPF layer *promised*; this module reads what the compiler
+*scheduled*.  It parses the compiled (post-SPMD-partitioning) HLO text and
+sums operand bytes of every collective (`all-gather`, `all-reduce`,
+`reduce-scatter`, `all-to-all`, `collective-permute`), giving:
+
+* the compliance check (ledger wire bytes vs scheduled collective bytes),
+* the §Roofline collective term (collective_bytes / (chips * link_bw)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = [
+    "CollectiveStats",
+    "parse_collectives",
+    "RooflineTerms",
+    "roofline_terms",
+    "DTYPE_BYTES",
+]
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+#: collective op name -> canonical kind
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+# e.g. "f32[128,256]{1,0}" or "bf16[8]"
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO instruction line: "  %name = TYPE[SHAPE] op-name(...)" — we match
+# result type + op name.  `op-name.N` suffixes (all-reduce.42) included.
+_INSTR_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"([a-z][a-z0-9-]*(?:-start|-done)?)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, incl. tuple types '(f32[..], u32[..])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def report(self) -> str:
+        lines = [f"{'collective':<22}{'count':>7}{'bytes':>16}"]
+        for k in sorted(self.bytes_by_kind):
+            lines.append(f"{k:<22}{self.count_by_kind[k]:>7}"
+                         f"{self.bytes_by_kind[k]:>16,}")
+        lines.append(f"{'TOTAL':<22}{self.total_count:>7}"
+                     f"{self.total_bytes:>16,}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# loop-aware census: multiply while-body costs by their trip counts
+# --------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_S32_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """{name: block_text} for every computation in the module."""
+    blocks = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            if cur_name:
+                blocks[cur_name] = "\n".join(cur_lines)
+            cur_name, cur_lines = m.group(1), [line]
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name:
+        blocks[cur_name] = "\n".join(cur_lines)
+    return blocks
+
+
+def _trip_count(cond_text: str) -> int:
+    """Heuristic: scan-lowered loop conditions compare the induction var
+    against an s32 constant — take the largest one (fallback 1)."""
+    consts = [int(c) for c in _S32_CONST.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+#: ops with no HBM data movement of their own
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+             "constant", "after-all", "partition-id", "replica-id"}
+
+# "%name = TYPE op(%a, %b, ...)" with the defined name captured
+_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"([a-z][a-z0-9-]*(?:-start|-done)?)\(([^)]*)")
+
+#: fusion-aware HBM model: compute ops stream operands + result from HBM;
+#: data-movement ops stream their result; everything elementwise is
+#: assumed fused into its consumer (what XLA:TPU does).
+_STREAM_IN_OUT = {"dot", "convolution"}
+_STREAM_OUT = {"gather", "dynamic-slice",
+               "copy", "transpose", "sort", "reduce", "reduce-window",
+               "fft", "iota", "rng-bit-generator", "pad", "concatenate",
+               "select-and-scatter", "broadcast"}
+#: in-place updates: XLA aliases the output buffer, so real HBM traffic is
+#: the UPDATE operand (operand 1), not the full result
+_STREAM_UPDATE = {"dynamic-update-slice", "scatter"}
+
+
+def _result_bytes(text: str) -> int:
+    total = 0
+    for m in _INSTR_RE.finditer(text):
+        type_str, op = m.groups()
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _FREE_OPS or op.endswith("-done"):
+            continue
+        total += _shape_bytes(type_str)
+    return total
+
+
+def _hbm_traffic(text: str) -> int:
+    """Fusion-aware HBM traffic of one computation block.
+
+    Matmuls/convs read their operands and write their result (weights +
+    activations dominate real transformer traffic); gathers/scatters/
+    slices/copies write their result; elementwise chains are assumed
+    fused (free).  Collectives are excluded (they have their own term).
+    """
+    sizes: Dict[str, int] = {}
+    entries = []
+    for m in _DEF_RE.finditer(text):
+        name, type_str, op, args = m.groups()
+        b = _shape_bytes(type_str)
+        sizes[name] = b
+        entries.append((name, b, op, args))
+    total = 0
+    for name, b, op, args in entries:
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _STREAM_IN_OUT:
+            total += b
+            for a in args.split(","):
+                a = a.strip().lstrip("%")
+                total += sizes.get(a, 0)
+        elif base in _STREAM_UPDATE:
+            ops = [a.strip().lstrip("%") for a in args.split(",")]
+            if len(ops) > 1:
+                total += sizes.get(ops[1], 0)   # the written slice
+        elif base in _STREAM_OUT:
+            total += b
+    return total
+
+
+def loop_aware_census(hlo_text: str):
+    """(CollectiveStats, unfused_traffic_bytes) with while-loop
+    trip-count multipliers.
+
+    ``parse_collectives`` counts a scan body once; this walks the
+    computation graph from ENTRY, multiplying each while body's costs by
+    the trip count recovered from its condition — the exact wire volume
+    of the scanned program, plus an unfused-result-bytes proxy for HBM
+    traffic (x2 for the read side; an upper bound that XLA fusion
+    tightens on the real target)."""
+    blocks = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in blocks:
+        st = parse_collectives(hlo_text)
+        return st, float(_hbm_traffic(hlo_text))
+
+    bytes_by_kind: Dict[str, float] = {}
+    count_by_kind: Dict[str, float] = {}
+    traffic = [0.0]
+    visiting = set()
+
+    def walk(name: str, mult: float):
+        if name not in blocks or name in visiting:
+            return
+        visiting.add(name)
+        text = blocks[name]
+        st = parse_collectives(text)
+        for k, b in st.bytes_by_kind.items():
+            bytes_by_kind[k] = bytes_by_kind.get(k, 0) + b * mult
+            count_by_kind[k] = count_by_kind.get(k, 0) \
+                + st.count_by_kind[k] * mult
+        traffic[0] += _hbm_traffic(text) * mult
+        handled = set()
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.groups()
+            trip = _trip_count(blocks.get(cond, ""))
+            handled.add(body)
+            handled.add(cond)
+            walk(body, mult * trip)
+        for m in _CALLS_RE.finditer(text):
+            callee = m.group(1)
+            if callee not in handled:
+                walk(callee, mult)
+        visiting.discard(name)
+
+    walk(entry, 1.0)
+    stats = CollectiveStats(
+        {k: int(v) for k, v in bytes_by_kind.items()},
+        {k: int(v) for k, v in count_by_kind.items()})
+    return stats, float(traffic[0])
+
+
+def parse_collectives_loop_aware(hlo_text: str) -> CollectiveStats:
+    return loop_aware_census(hlo_text)[0]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in (compiled) HLO text.
+
+    Result shape is used as the proxy for wire volume (for permute/
+    gather/reduce the received bytes; for `-start` ops the async pair is
+    counted once via the start op).  `-done` ops are skipped.
+    """
+    bytes_by_kind: Dict[str, int] = {}
+    count_by_kind: Dict[str, int] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        type_str, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        kind = next((k for k in _COLLECTIVE_KINDS if base == k), None)
+        if kind is None:
+            continue
+        b = _shape_bytes(type_str)
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+# --------------------------------------------------------------------------
+# Roofline terms (§Roofline): three times in seconds + dominant bottleneck
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per-device FLOPs from cost_analysis
+    hlo_bytes: float            # per-device HBM traffic from cost_analysis
+    collective_bytes: float     # per-device collective bytes from HLO
+    model_flops: float          # 6*N*D useful flops (global, per step)
+    peak_flops: float           # per chip
+    hbm_bw: float
+    link_bw: float
+    memory_per_device: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / self.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): how much compiled compute is
+        useful work (catches remat / redundancy waste)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilisation at the bound: MODEL_FLOPS /
+        (chips * peak * T_bound) — an MFU-style score from the dry-run."""
+        denom = self.chips * self.peak_flops * self.t_bound
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch:<24}{self.shape:<13}{self.mesh:<8}"
+                f"{self.t_compute * 1e3:>10.2f}{self.t_memory * 1e3:>10.2f}"
+                f"{self.t_collective * 1e3:>10.2f}  {self.bottleneck:<11}"
+                f"{self.useful_flop_fraction:>7.1%}"
+                f"{self.roofline_fraction:>9.2%}"
+                f"{self.memory_per_device / 1e9:>9.1f}G")
+
+    @staticmethod
+    def header() -> str:
+        return (f"{'arch':<24}{'shape':<13}{'mesh':<8}"
+                f"{'Tcomp(ms)':>10}{'Tmem(ms)':>10}{'Tcoll(ms)':>10}  "
+                f"{'bound':<11}{'useful':>7}{'roofline':>9}{'mem/dev':>10}")
+
+
+def roofline_terms(arch: str, shape: str, mesh_name: str, chips: int,
+                   cost_analysis: Optional[dict], hlo_text: str,
+                   model_flops: float, peak_flops: float, hbm_bw: float,
+                   link_bw: float, memory_per_device: float = 0.0
+                   ) -> RooflineTerms:
+    flops = float(cost_analysis.get("flops", 0.0)) if cost_analysis else 0.0
+    in_bytes = sum(v for k, v in (cost_analysis or {}).items()
+                   if k.startswith("bytes accessed"))
+    colls = parse_collectives(hlo_text)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=float(in_bytes),
+        collective_bytes=float(colls.total_bytes),
+        model_flops=model_flops, peak_flops=peak_flops,
+        hbm_bw=hbm_bw, link_bw=link_bw,
+        memory_per_device=memory_per_device)

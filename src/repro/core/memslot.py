@@ -1,0 +1,105 @@
+"""Memory slots and registration — ``lpf_register_{local,global}``,
+``lpf_deregister``, ``lpf_resize_memory_register``.
+
+A slot names a per-process 1-D array (LPF registers raw memory areas; we
+register arrays of a fixed dtype, with offsets/sizes counted in elements).
+Multi-dimensional tensors are registered through ``flatten=True`` views.
+
+The capacity contract is the paper's: the number of simultaneously
+registered slots must not exceed the reserved register size, and staging
+beyond queue capacity raises a *mitigable* error before any side effect.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from .errors import LPFCapacityError, LPFFatalError
+
+__all__ = ["Slot", "SlotRegistry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    """Handle to a registered memory area (``lpf_memslot_t``)."""
+
+    sid: int
+    name: str
+    size: int            # elements
+    dtype: Any
+    kind: str            # "global" | "local"
+    orig_shape: tuple    # for flatten-registered tensors
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"Slot<{self.name}#{self.sid} {self.kind} "
+                f"{self.size}x{jnp.dtype(self.dtype).name}>")
+
+
+class SlotRegistry:
+    """Tracks registered slots + their current (traced) values."""
+
+    def __init__(self, capacity: int = 0):
+        self.capacity = capacity
+        self._slots: Dict[int, Slot] = {}
+        self._values: Dict[int, jnp.ndarray] = {}
+        self._next_sid = 0
+
+    # -- lpf_resize_memory_register -------------------------------------
+    def resize(self, capacity: int) -> None:
+        if capacity < len(self._slots):
+            raise LPFCapacityError(
+                f"cannot shrink register below {len(self._slots)} active slots")
+        self.capacity = capacity
+
+    # -- lpf_register_{local,global} -------------------------------------
+    def register(self, name: str, value, kind: str, flatten: bool = True) -> Slot:
+        if len(self._slots) >= self.capacity:
+            raise LPFCapacityError(
+                f"memory register full ({self.capacity}); call "
+                f"resize_memory_register first")
+        value = jnp.asarray(value)
+        orig_shape = value.shape
+        if flatten:
+            value = value.reshape(-1)
+        elif value.ndim != 1:
+            raise LPFFatalError("slots are 1-D; pass flatten=True for tensors")
+        slot = Slot(self._next_sid, name, int(value.shape[0]), value.dtype,
+                    kind, tuple(orig_shape))
+        self._next_sid += 1
+        self._slots[slot.sid] = slot
+        self._values[slot.sid] = value
+        return slot
+
+    # -- lpf_deregister ---------------------------------------------------
+    def deregister(self, slot: Slot) -> None:
+        self._check(slot)
+        del self._slots[slot.sid]
+        del self._values[slot.sid]
+
+    # -- value plumbing ----------------------------------------------------
+    def _check(self, slot: Slot) -> None:
+        if slot.sid not in self._slots:
+            raise LPFFatalError(f"slot {slot} is not registered")
+
+    def value(self, slot: Slot) -> jnp.ndarray:
+        self._check(slot)
+        return self._values[slot.sid]
+
+    def tensor(self, slot: Slot) -> jnp.ndarray:
+        """Current value reshaped to the originally registered shape."""
+        return self.value(slot).reshape(slot.orig_shape)
+
+    def set_value(self, slot: Slot, value: jnp.ndarray) -> None:
+        self._check(slot)
+        if value.shape != (slot.size,) or value.dtype != slot.dtype:
+            raise LPFFatalError(
+                f"local write to {slot} with mismatched shape/dtype "
+                f"{value.shape}/{value.dtype}")
+        self._values[slot.sid] = value
+
+    @property
+    def n_active(self) -> int:
+        return len(self._slots)

@@ -1,0 +1,615 @@
+"""The superstep compiler — ``lpf_sync``'s four phases on XLA.
+
+The paper implements ``lpf_sync`` in four phases: (1) barrier + meta-data
+exchange, (2) write-conflict resolution, (3) data exchange, (4) barrier.
+On TPU/XLA the communication pattern of a BSP superstep is static at trace
+time, so phases (1)-(2) run *in the compiler*: we analyse the staged
+message table, resolve write conflicts by deterministic arbitration
+(ascending source PID; the last writer — highest PID — wins, a refinement
+of the paper's arbitrary-order CRCW), and lower phase (3) to a minimal
+schedule of XLA collectives.  Phase (4) is implicit in XLA's dataflow.
+
+Three execution methods mirror the paper's Table 1:
+
+* ``direct``  — greedy edge-colouring of the message multigraph into
+  partial permutations; one ``ppermute`` per round (m rounds for an
+  m-relation), plus fast paths for uniform permutations (1 static-slice
+  ``ppermute``) and canonical total exchanges (1 ``all_to_all``).
+* ``bruck``   — the randomised-Bruck flavour: ceil(log2 p) rounds in
+  *relative-destination coordinates* (statically indexable rows), paying
+  O(log p) x volume for O(log p) latency.
+* ``valiant`` — two-phase randomised routing for skewed h-relations:
+  messages bounce via a seeded-hash intermediate, each phase a ``direct``
+  sync of a near-balanced relation.
+
+Every sync appends a :class:`SuperstepCost` to the context ledger so model
+compliance can be audited against the compiled HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .attrs import SyncAttributes
+from .cost import SuperstepCost
+from .errors import LPFFatalError
+from .memslot import Slot, SlotRegistry
+
+__all__ = ["Msg", "execute_sync", "plan_cost"]
+
+AxisNames = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Msg:
+    """One staged one-sided transfer (a ``lpf_put``; ``lpf_get`` is staged
+    as a put from the remote side — the table is globally known)."""
+
+    src: int
+    dst: int
+    src_slot: Slot
+    src_off: int
+    dst_slot: Slot
+    dst_off: int
+    size: int
+    #: which call staged this: "put" (src is the caller's own memory, may
+    #: be local-registered), "get" (dst is the caller's own), or "table"
+    #: (fully general: both ends remotely referred -> both global)
+    origin: str = "table"
+
+    def validate(self, p: int) -> None:
+        if not (0 <= self.src < p and 0 <= self.dst < p):
+            raise LPFFatalError(f"pid out of range in {self}")
+        if self.size < 0:
+            raise LPFFatalError(f"negative size in {self}")
+        if self.src_off < 0 or self.src_off + self.size > self.src_slot.size:
+            raise LPFFatalError(f"source range OOB in {self}")
+        if self.dst_off < 0 or self.dst_off + self.size > self.dst_slot.size:
+            raise LPFFatalError(f"destination range OOB in {self}")
+        if self.src_slot.dtype != self.dst_slot.dtype:
+            raise LPFFatalError(f"dtype mismatch in {self}")
+        if self.src != self.dst:
+            # the remotely-referred side must be collectively registered
+            # (paper S2.1); the caller's own side may be register_local
+            need_global = {"put": (self.dst_slot,),
+                           "get": (self.src_slot,),
+                           "table": (self.src_slot, self.dst_slot)}
+            for slot in need_global[self.origin]:
+                if slot.kind != "global":
+                    raise LPFFatalError(
+                        f"remotely-referred slot {slot} must be "
+                        f"register_global ({self.origin} in {self})")
+
+
+# --------------------------------------------------------------------------
+# Phase 1-2: trace-time planning
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Round:
+    """One partial permutation: <=1 send and <=1 receive per process."""
+
+    msgs: List[Msg]
+    size: int = 0  # padded payload (elements), filled by finalise
+
+    def finalise(self) -> None:
+        self.size = max((m.size for m in self.msgs), default=0)
+
+
+def _conflicts(a: Msg, b: Msg) -> bool:
+    return (a.dst == b.dst and a.dst_slot.sid == b.dst_slot.sid
+            and a.dst_off < b.dst_off + b.size
+            and b.dst_off < a.dst_off + a.size)
+
+
+def _colour_rounds(msgs: Sequence[Msg], no_conflict: bool) -> List[Round]:
+    """Greedy edge colouring preserving CRCW arbitration order.
+
+    Messages are placed in ascending (src, dst, dst_off) order; a message
+    that overlaps an earlier message's destination region must land in a
+    strictly later round so that the higher-PID write is applied last.
+    """
+    order = sorted(msgs, key=lambda m: (m.src, m.dst, m.dst_off))
+    rounds: List[Round] = []
+    send_busy: List[set] = []
+    recv_busy: List[set] = []
+    placed: List[Tuple[Msg, int]] = []
+    for m in order:
+        floor = 0
+        if not no_conflict:
+            for prev, r in placed:
+                if _conflicts(prev, m):
+                    floor = max(floor, r + 1)
+        r = floor
+        while True:
+            while r >= len(rounds):
+                rounds.append(Round(msgs=[]))
+                send_busy.append(set())
+                recv_busy.append(set())
+            if m.src not in send_busy[r] and m.dst not in recv_busy[r]:
+                rounds[r].msgs.append(m)
+                send_busy[r].add(m.src)
+                recv_busy[r].add(m.dst)
+                placed.append((m, r))
+                break
+            r += 1
+    for rd in rounds:
+        rd.finalise()
+    return rounds
+
+
+def _is_uniform_round(msgs: Sequence[Msg], p: int) -> bool:
+    """True if all messages share offsets and size (static-slice fast path)."""
+    if not msgs:
+        return False
+    m0 = msgs[0]
+    return all(m.src_off == m0.src_off and m.dst_off == m0.dst_off
+               and m.size == m0.size for m in msgs)
+
+
+def _detect_total_exchange(msgs: Sequence[Msg], p: int
+                           ) -> Optional[Tuple[Slot, Slot, int]]:
+    """Detect the canonical total exchange: every (s, d) pair sends ``w``
+    elements with src_off = d*w and dst_off = s*w -> one ``all_to_all``."""
+    if len(msgs) != p * p or p == 1:
+        return None
+    m0 = msgs[0]
+    w = m0.size
+    if w == 0:
+        return None
+    seen = set()
+    for m in msgs:
+        if (m.src_slot.sid != m0.src_slot.sid
+                or m.dst_slot.sid != m0.dst_slot.sid
+                or m.size != w or m.src_off != m.dst * w
+                or m.dst_off != m.src * w or (m.src, m.dst) in seen):
+            return None
+        seen.add((m.src, m.dst))
+    if m0.src_slot.size < p * w or m0.dst_slot.size < p * w:
+        return None
+    return (m0.src_slot, m0.dst_slot, w)
+
+
+def _detect_allgather(msgs: Sequence[Msg], p: int
+                      ) -> Optional[Tuple[Slot, Slot, int, np.ndarray]]:
+    """Detect the canonical all-gather: every src sends the *same* ``w``
+    elements (from a per-src constant offset) to every other process at
+    dst_off = src*w -> one ``lax.all_gather``."""
+    if p == 1 or len(msgs) not in (p * p, p * (p - 1)):
+        return None
+    m0 = msgs[0]
+    w = m0.size
+    if w == 0:
+        return None
+    seen = set()
+    src_off = np.full(p, -1, np.int64)
+    for m in msgs:
+        if (m.src_slot.sid != m0.src_slot.sid
+                or m.dst_slot.sid != m0.dst_slot.sid
+                or m.size != w
+                or m.dst_off != m.src * w or (m.src, m.dst) in seen):
+            return None
+        if src_off[m.src] == -1:
+            src_off[m.src] = m.src_off
+        elif src_off[m.src] != m.src_off:
+            return None
+        seen.add((m.src, m.dst))
+    if m0.src_slot.size < w or m0.dst_slot.size < p * w:
+        return None
+    if len(msgs) == p * (p - 1) and any(s == d for s, d in seen):
+        return None
+    src_off[src_off == -1] = 0
+    return (m0.src_slot, m0.dst_slot, w, src_off)
+
+
+def plan_cost(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
+              label: str, method: str, rounds: int,
+              wire_sent: Dict[int, int], wire_recv: Dict[int, int]) -> SuperstepCost:
+    sent = np.zeros(p, dtype=np.int64)
+    recv = np.zeros(p, dtype=np.int64)
+    for m in msgs:
+        if m.src != m.dst:
+            nbytes = m.size * jnp.dtype(m.src_slot.dtype).itemsize
+            sent[m.src] += nbytes
+            recv[m.dst] += nbytes
+    h_bytes = int(max(np.max(sent, initial=0), np.max(recv, initial=0)))
+    wire = 0
+    total = 0
+    for pid in range(p):
+        wire = max(wire, wire_sent.get(pid, 0), wire_recv.get(pid, 0))
+        total += wire_sent.get(pid, 0)
+    return SuperstepCost(label=label, h_bytes=h_bytes, wire_bytes=wire,
+                         total_wire_bytes=total, rounds=rounds,
+                         n_msgs=len(msgs), method=method)
+
+
+# --------------------------------------------------------------------------
+# Phase 3: data exchange primitives (traced)
+# --------------------------------------------------------------------------
+
+def _gather_payload(val: jnp.ndarray, offs: np.ndarray, size: int,
+                    myid: jnp.ndarray, static_off: Optional[int]) -> jnp.ndarray:
+    """Extract ``size`` elements starting at a per-PID offset."""
+    if static_off is not None:
+        return lax.dynamic_slice(val, (static_off,), (size,)) \
+            if static_off + size <= val.shape[0] else \
+            jnp.take(val, static_off + jnp.arange(size), mode="fill",
+                     fill_value=0)
+    off = jnp.asarray(offs)[myid]
+    if int(np.max(offs)) + size <= val.shape[0]:
+        return lax.dynamic_slice(val, (off,), (size,))
+    idx = off + jnp.arange(size)
+    return jnp.take(val, idx, mode="fill", fill_value=0)
+
+
+def _scatter_payload(val: jnp.ndarray, payload: jnp.ndarray,
+                     offs: np.ndarray, sizes: np.ndarray, mask: np.ndarray,
+                     myid: jnp.ndarray) -> jnp.ndarray:
+    """Blend ``payload`` into ``val`` at a per-PID offset with per-PID
+    length; PIDs with ``mask == 0`` keep their data untouched."""
+    size = payload.shape[0]
+    off = jnp.asarray(offs)[myid]
+    nrecv = jnp.asarray(sizes)[myid]
+    active = jnp.asarray(mask)[myid]
+    keep = (jnp.arange(size) < nrecv) & (active > 0)
+    if int(np.max(offs)) + size <= val.shape[0]:
+        cur = lax.dynamic_slice(val, (off,), (size,))
+        new = jnp.where(keep, payload, cur)
+        return lax.dynamic_update_slice(val, new, (off,))
+    idx = off + jnp.arange(size)
+    return val.at[idx].set(jnp.where(keep, payload, val.at[idx].get(
+        mode="fill", fill_value=0)), mode="drop")
+
+
+def _maybe_compress(payload: jnp.ndarray, attrs: SyncAttributes):
+    """int8 symmetric quantisation of a float payload (lower effective g)."""
+    spec = attrs.compress
+    if spec is None or not jnp.issubdtype(payload.dtype, jnp.floating):
+        return payload, None
+    if spec.bits != 8:
+        raise LPFFatalError(f"unsupported compression bits={spec.bits}")
+    scale = jnp.max(jnp.abs(payload)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(payload / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _maybe_decompress(payload, scale, dtype):
+    if scale is None:
+        return payload
+    return (payload.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _ppermute(x, axes: AxisNames, perm: List[Tuple[int, int]]):
+    return lax.ppermute(x, axes if len(axes) > 1 else axes[0], perm)
+
+
+# --------------------------------------------------------------------------
+# Method: direct
+# --------------------------------------------------------------------------
+
+def _execute_direct(registry: SlotRegistry, msgs: List[Msg], p: int,
+                    axes: AxisNames, myid, attrs: SyncAttributes,
+                    wire_sent: Dict[int, int], wire_recv: Dict[int, int]
+                    ) -> int:
+    """Direct method: rounds of partial permutations.  Returns #rounds.
+
+    Messages are grouped by (src_slot, dst_slot) pair — each round draws
+    from one source slot and writes one destination slot — and all
+    payloads are extracted from the *pre-sync* slot values before any
+    write is applied (LPF reads observe the pre-superstep state)."""
+    groups: Dict[Tuple[int, int], List[Msg]] = {}
+    for m in msgs:
+        groups.setdefault((m.src_slot.sid, m.dst_slot.sid), []).append(m)
+    rounds: List[Round] = []
+    for key in sorted(groups):
+        rounds.extend(_colour_rounds(groups[key], attrs.no_conflict))
+
+    # ---- extraction (reads observe pre-sync values) ----
+    extracted: List[jnp.ndarray] = []
+    scales: List[Optional[jnp.ndarray]] = []
+    for rd in rounds:
+        src_slot = rd.msgs[0].src_slot
+        offs = np.zeros(p, dtype=np.int32)
+        for m in rd.msgs:
+            offs[m.src] = m.src_off
+        static_off = rd.msgs[0].src_off if _is_uniform_round(rd.msgs, p) else None
+        payload = _gather_payload(registry.value(src_slot), offs, rd.size,
+                                  myid, static_off)
+        payload, scale = _maybe_compress(payload, attrs)
+        extracted.append(payload)
+        scales.append(scale)
+
+    # ---- exchange + ordered writes ----
+    n_collectives = 0
+    for rd, payload, scale in zip(rounds, extracted, scales):
+        remote = [(m.src, m.dst) for m in rd.msgs if m.src != m.dst]
+        dst_slot = rd.msgs[0].dst_slot
+        itemsize = jnp.dtype(dst_slot.dtype).itemsize
+        wire_elem = (rd.size // 4 + 1) if scale is not None else rd.size
+        if remote:
+            arrived = _ppermute(payload, axes, remote)
+            if scale is not None:
+                arrived_scale = _ppermute(scale, axes, remote)
+            n_collectives += 1 if scale is None else 2
+            for s, d in remote:
+                wire_sent[s] = wire_sent.get(s, 0) + wire_elem * itemsize
+                wire_recv[d] = wire_recv.get(d, 0) + wire_elem * itemsize
+        else:
+            arrived, arrived_scale = payload, scale
+        # self-messages bypass the wire (a local memcpy, as in the paper's
+        # shared-memory backend)
+        selfs = [(m.src, m.dst) for m in rd.msgs if m.src == m.dst]
+        if selfs and remote:
+            self_mask = np.zeros(p, np.int8)
+            for s, _ in selfs:
+                self_mask[s] = 1
+            pick = jnp.asarray(self_mask)[myid] > 0
+            arrived = jnp.where(pick, payload, arrived)
+            if scale is not None:
+                arrived_scale = jnp.where(pick, scale, arrived_scale)
+        arrived = _maybe_decompress(
+            arrived, arrived_scale if scale is not None else None,
+            dst_slot.dtype)
+
+        offs = np.zeros(p, dtype=np.int32)
+        sizes = np.zeros(p, dtype=np.int32)
+        mask = np.zeros(p, dtype=np.int8)
+        for m in rd.msgs:
+            offs[m.dst] = m.dst_off
+            sizes[m.dst] = m.size
+            mask[m.dst] = 1
+        registry.set_value(dst_slot, _scatter_payload(
+            registry.value(dst_slot), arrived, offs, sizes, mask, myid))
+    return max(n_collectives, 1)
+
+
+# --------------------------------------------------------------------------
+# Method: bruck (relative-destination coordinates; static row sets)
+# --------------------------------------------------------------------------
+
+def _execute_bruck(registry: SlotRegistry, msgs: List[Msg], p: int,
+                   axes: AxisNames, myid, attrs: SyncAttributes,
+                   wire_sent: Dict[int, int], wire_recv: Dict[int, int]
+                   ) -> int:
+    """Bruck-style log-latency exchange.
+
+    Row ``r`` of the working matrix holds the payload this process
+    currently carries whose *original* relative distance (dst - origin
+    mod p) is ``r``.  All blocks of equal original distance move through
+    identical hop sequences, so row sets per round are static.  Supports
+    at most one message per (src, dst) pair; sizes padded to the max.
+    """
+    pairs = {}
+    for m in msgs:
+        key = (m.src, m.dst)
+        if key in pairs:
+            raise LPFFatalError("bruck method requires unique (src,dst) pairs; "
+                                "use method='direct' for multigraphs")
+        pairs[key] = m
+    w = max(m.size for m in msgs)
+    m0 = msgs[0]
+    src_slot, dst_slot = m0.src_slot, m0.dst_slot
+    for m in msgs:
+        if m.src_slot.sid != src_slot.sid or m.dst_slot.sid != dst_slot.sid:
+            raise LPFFatalError("bruck method requires a single slot pair")
+    itemsize = jnp.dtype(src_slot.dtype).itemsize
+
+    # tables[src, rel] -> offset/size/mask of the message src -> src+rel
+    src_off = np.zeros((p, p), np.int32)
+    dst_off = np.zeros((p, p), np.int32)
+    sizes = np.zeros((p, p), np.int32)
+    mask = np.zeros((p, p), np.int8)
+    for (s, d), m in pairs.items():
+        rel = (d - s) % p
+        src_off[s, rel] = m.src_off
+        dst_off[d, rel] = m.dst_off   # indexed by *receiver* pid
+        sizes[s, rel] = m.size
+        mask[s, rel] = 1
+    val = registry.value(src_slot)
+    my_off = jnp.asarray(src_off)[myid]                       # [p]
+    idx = my_off[:, None] + jnp.arange(w)[None, :]            # [p, w]
+    buf = jnp.take(val, idx.reshape(-1), mode="fill",
+                   fill_value=0).reshape(p, w)
+    nrounds = max(1, math.ceil(math.log2(p))) if p > 1 else 0
+
+    n_collectives = 0
+    for k in range(nrounds):
+        step = 1 << k
+        rows = [r for r in range(1, p) if r & step]
+        if not rows:
+            continue
+        sub = buf[np.asarray(rows)]
+        perm = [(i, (i + step) % p) for i in range(p)]
+        sub = _ppermute(sub, axes, perm)
+        buf = buf.at[np.asarray(rows)].set(sub)
+        n_collectives += 1
+        vol = len(rows) * w * itemsize
+        for pid in range(p):
+            wire_sent[pid] = wire_sent.get(pid, 0) + vol
+            wire_recv[pid] = wire_recv.get(pid, 0) + vol
+
+    # delivery: row r arrived from origin (me - r) % p; write at the
+    # receiver-side offset table entries.
+    out = registry.value(dst_slot)
+    my_dst_off = jnp.asarray(dst_off)[myid]                   # [p]
+    my_sizes = jnp.asarray(sizes)                             # [p(src), p(rel)]
+    origin = (myid - jnp.arange(p)) % p
+    my_len = my_sizes[origin, jnp.arange(p)]                  # [p]
+    my_mask = jnp.asarray(mask)[origin, jnp.arange(p)]        # [p]
+    # apply rows in ascending origin pid order for CRCW determinism
+    order = np.arange(p)
+    for r in order:
+        keep = (jnp.arange(w) < my_len[r]) & (my_mask[r] > 0)
+        tgt = my_dst_off[r] + jnp.arange(w)
+        cur = out.at[tgt].get(mode="fill",
+                              fill_value=0)
+        out = out.at[tgt].set(jnp.where(keep, buf[r], cur), mode="drop")
+    registry.set_value(dst_slot, out)
+    return max(n_collectives, 1)
+
+
+# --------------------------------------------------------------------------
+# Method: valiant two-phase randomised routing
+# --------------------------------------------------------------------------
+
+def _valiant_split(msgs: List[Msg], p: int, seed: int, scratch: Slot
+                   ) -> Tuple[List[Msg], List[Msg]]:
+    """Split messages into two near-balanced phases via seeded hashing."""
+    cursor = np.zeros(p, dtype=np.int64)
+    phase1: List[Msg] = []
+    phase2: List[Msg] = []
+    for i, m in enumerate(sorted(msgs, key=lambda m: (m.src, m.dst, m.dst_off))):
+        t = (m.src * 2654435761 + m.dst * 40503 + i * 97 + seed) % p
+        off = int(cursor[t])
+        if off + m.size > scratch.size:
+            raise LPFFatalError(
+                "valiant scratch overflow; resize_message_queue with a "
+                "larger payload capacity")
+        cursor[t] += m.size
+        phase1.append(Msg(m.src, t, m.src_slot, m.src_off,
+                          scratch, off, m.size))
+        phase2.append(Msg(t, m.dst, scratch, off,
+                          m.dst_slot, m.dst_off, m.size))
+    return phase1, phase2
+
+
+# --------------------------------------------------------------------------
+# entry point
+# --------------------------------------------------------------------------
+
+def execute_sync(registry: SlotRegistry, queue: List[Msg], p: int,
+                 axes: AxisNames, myid, attrs: SyncAttributes,
+                 label: str, scratch: Optional[Slot] = None) -> SuperstepCost:
+    """Run one superstep; mutates registry values; returns its cost record."""
+    msgs = list(queue)
+    for m in msgs:
+        m.validate(p)
+    wire_sent: Dict[int, int] = {}
+    wire_recv: Dict[int, int] = {}
+
+    if not msgs or p == 0:
+        return plan_cost(msgs, max(p, 1), attrs, label, "noop", 0,
+                         wire_sent, wire_recv)
+
+    if p == 1:
+        # LPF_ROOT / sequential context: puts degenerate to memcpys.
+        for m in sorted(msgs, key=lambda m: (m.src, m.dst, m.dst_off)):
+            src = registry.value(m.src_slot)
+            dst = registry.value(m.dst_slot)
+            chunk = lax.dynamic_slice(src, (m.src_off,), (m.size,))
+            registry.set_value(m.dst_slot,
+                               lax.dynamic_update_slice(dst, chunk,
+                                                        (m.dst_off,)))
+        return plan_cost(msgs, p, attrs, label, "noop", 0, wire_sent, wire_recv)
+
+    method = attrs.method
+    if method == "auto":
+        fused = _detect_total_exchange(msgs, p)
+        gathered = _detect_allgather(msgs, p)
+        if fused is not None:
+            method = "fused"
+        elif gathered is not None:
+            method = "fused_ag"
+        else:
+            # latency heuristic: many small messages per process -> bruck
+            per_src: Dict[int, int] = {}
+            for m in msgs:
+                per_src[m.src] = per_src.get(m.src, 0) + 1
+            max_deg = max(per_src.values())
+            uniq = len({(m.src, m.dst) for m in msgs}) == len(msgs)
+            one_pair = len({(m.src_slot.sid, m.dst_slot.sid) for m in msgs}) == 1
+            sizes = [m.size for m in msgs]
+            small = max(sizes) <= 4 * max(1, min(sizes))
+            if uniq and one_pair and small and max_deg > 4 * math.ceil(
+                    math.log2(p)):
+                method = "bruck"
+            else:
+                method = "direct"
+
+    if method == "fused_ag":
+        src_slot, dst_slot, w, src_off = _detect_allgather(msgs, p)
+        sval = registry.value(src_slot)
+        if (src_off == src_off[0]).all():
+            x = lax.dynamic_slice(sval, (int(src_off[0]),), (w,))
+        else:
+            x = _gather_payload(sval, src_off.astype(np.int32), w, myid, None)
+        axis = axes if len(axes) > 1 else axes[0]
+        x, scale = _maybe_compress(x, attrs)
+        y = lax.all_gather(x, axis, tiled=True)
+        if scale is not None:
+            scales = lax.all_gather(scale, axis, tiled=False)  # [p]
+            y = (y.reshape(p, w).astype(jnp.float32)
+                 * scales[:, None]).reshape(p * w).astype(src_slot.dtype)
+        dst = registry.value(dst_slot)
+        if len(msgs) == p * (p - 1):
+            # exclude-self variant: keep own chunk as-is
+            own = lax.dynamic_slice(dst, (myid * w,), (w,))
+            y = lax.dynamic_update_slice(y, own, (myid * w,))
+        registry.set_value(dst_slot,
+                           lax.dynamic_update_slice(dst, y, (0,)))
+        itemsize = 1 if scale is not None else jnp.dtype(src_slot.dtype).itemsize
+        for pid in range(p):
+            wire_sent[pid] = (p - 1) * w * itemsize
+            wire_recv[pid] = (p - 1) * w * itemsize
+        return plan_cost(msgs, p, attrs, label, "fused_ag", 1,
+                         wire_sent, wire_recv)
+
+    if method == "fused":
+        src_slot, dst_slot, w = _detect_total_exchange(msgs, p)
+        x = registry.value(src_slot)[: p * w].reshape(p, w)
+        axis = axes if len(axes) > 1 else axes[0]
+        scale = None
+        if attrs.compress is not None and jnp.issubdtype(
+                x.dtype, jnp.floating):
+            # per-destination-row scales travel alongside the payload
+            scale = jnp.max(jnp.abs(x), axis=1) / 127.0 + 1e-30  # [p]
+            x = jnp.clip(jnp.round(x / scale[:, None]),
+                         -127, 127).astype(jnp.int8)
+        y = lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=False)
+        if scale is not None:
+            scales = lax.all_to_all(scale, axis, split_axis=0,
+                                    concat_axis=0, tiled=False)  # [p]
+            y = (y.astype(jnp.float32) * scales[:, None]).astype(
+                src_slot.dtype)
+        y = y.reshape(p * w)
+        dst = registry.value(dst_slot)
+        registry.set_value(dst_slot,
+                           lax.dynamic_update_slice(dst, y, (0,)))
+        itemsize = 1 if scale is not None else jnp.dtype(src_slot.dtype).itemsize
+        for pid in range(p):
+            wire_sent[pid] = (p - 1) * w * itemsize
+            wire_recv[pid] = (p - 1) * w * itemsize
+        return plan_cost(msgs, p, attrs, label, "fused", 1,
+                         wire_sent, wire_recv)
+
+    if method == "valiant":
+        if scratch is None:
+            raise LPFFatalError("valiant routing needs a scratch slot; the "
+                                "context provisions one via "
+                                "resize_message_queue(payload=...)")
+        ph1, ph2 = _valiant_split(msgs, p, attrs.valiant_seed, scratch)
+        sub = attrs.replace(method="direct")
+        r1 = _execute_direct(registry, ph1, p, axes, myid, sub,
+                             wire_sent, wire_recv)
+        r2 = _execute_direct(registry, ph2, p, axes, myid, sub,
+                             wire_sent, wire_recv)
+        return plan_cost(msgs, p, attrs, label, "valiant", r1 + r2,
+                         wire_sent, wire_recv)
+
+    if method == "bruck":
+        rounds = _execute_bruck(registry, msgs, p, axes, myid, attrs,
+                                wire_sent, wire_recv)
+        return plan_cost(msgs, p, attrs, label, "bruck", rounds,
+                         wire_sent, wire_recv)
+
+    rounds = _execute_direct(registry, msgs, p, axes, myid, attrs,
+                             wire_sent, wire_recv)
+    return plan_cost(msgs, p, attrs, label, "direct", rounds,
+                     wire_sent, wire_recv)

@@ -1,0 +1,3 @@
+"""Data pipeline."""
+from .pipeline import DataConfig, SyntheticStream
+__all__ = ["DataConfig", "SyntheticStream"]

@@ -1,0 +1,15 @@
+"""Oracle for the local FFT kernel: jnp.fft."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["fft_ref", "ifft_ref"]
+
+
+def fft_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.fft.fft(jnp.asarray(x, jnp.complex64)).astype(jnp.complex64)
+
+
+def ifft_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.fft.ifft(jnp.asarray(x, jnp.complex64)).astype(jnp.complex64)

@@ -1,0 +1,321 @@
+"""Flash attention Pallas TPU kernel (forward + backward).
+
+TPU-native tiling: the grid's minor-most dimension iterates sequentially
+on a core, so the online-softmax state (m, l, acc) lives in VMEM scratch
+and accumulates across the key-block dimension.  Block shapes are
+(8k, 128)-aligned for the MXU; all accumulation in f32.
+
+Supports: causal masking, sliding-window (local) attention, logit
+soft-capping (gemma-2), and GQA via a kv-head index map (no K/V
+replication in HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pick_block(requested: int, seq: int) -> int:
+    """Largest power-of-two <= requested that divides seq (ragged
+    sequences then never read OOB-padded blocks)."""
+    b = min(requested, seq)
+    while seq % b:
+        b //= 2
+    return max(b, 1)
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+                bq: int, bk: int, seq_len: int, causal: bool,
+                window: Optional[int], softcap: Optional[float],
+                scale: float):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # k block (minor-most: sequential)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                       # [bq, 1]
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nj - 1)
+    def _final():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[...]
+                         + jnp.log(jnp.maximum(l_scr[...], 1e-30)))
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """q: [B, H, S, D]; k, v: [B, Hkv, S, D] -> (o [B,H,S,D],
+    lse [B,H,S,1] log-sum-exp residual for the backward)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    bq = _pick_block(block_q, S)
+    bk = _pick_block(block_k, S)
+    nq = S // bq
+    nk = S // bk
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _fwd_kernel, bq=bq, bk=bk, seq_len=S, causal=causal,
+        window=window, softcap=softcap, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((B, H, S, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m
+            pltpu.VMEM((bq, 1), jnp.float32),   # l
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# backward (two passes: dK/dV over q-blocks, dQ over k-blocks)
+# --------------------------------------------------------------------------
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr, *,
+                    bq: int, bk: int, seq_len: int, causal: bool,
+                    window: Optional[int], softcap: Optional[float],
+                    scale: float):
+    j = pl.program_id(2)          # k block
+    i = pl.program_id(3)          # q block (sequential accumulation)
+    ni = pl.num_programs(3)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)                  # [bq, d]
+    lse = lse_ref[0, 0].astype(jnp.float32)                # [bq, 1]
+    delta = delta_ref[0, 0].astype(jnp.float32)            # [bq, 1]
+
+    s_raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    if softcap is not None:
+        t = jnp.tanh(s_raw / softcap)
+        s = softcap * t
+        dcap = 1.0 - t * t
+    else:
+        s = s_raw
+        dcap = None
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)             # [bq, bk]
+
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)
+    if dcap is not None:
+        ds = ds * dcap
+    dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(i == ni - 1)
+    def _final():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_scr, *,
+                   bq: int, bk: int, seq_len: int, causal: bool,
+                   window: Optional[int], softcap: Optional[float],
+                   scale: float):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)
+    delta = delta_ref[0, 0].astype(jnp.float32)
+
+    s_raw = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    if softcap is not None:
+        t = jnp.tanh(s_raw / softcap)
+        s = softcap * t
+        dcap = 1.0 - t * t
+    else:
+        s = s_raw
+        dcap = None
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)
+    if dcap is not None:
+        ds = ds * dcap
+    dq_scr[...] += jax.lax.dot(ds, k,
+                               preferred_element_type=jnp.float32) * scale
+
+    @pl.when(j == nj - 1)
+    def _final():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, do, lse, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """Returns (dq, dk, dv).  ``lse`` is the forward log-sum-exp
+    [B, H, S, 1] (recomputed by ops.py's custom_vjp residuals)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    bq = _pick_block(block_q, S)
+    bk = _pick_block(block_k, S)
+    nq = S // bq
+    nk = S // bk
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1, keepdims=True)               # [B, H, S, 1]
+
+    common = dict(bq=bq, bk=bk, seq_len=S, causal=causal, window=window,
+                  softcap=softcap, scale=scale)
+    # dK/dV computed per *query* head then group-summed outside.
+    dkv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **common),
+        grid=(B, H, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, i, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, i, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, j, i: (b, h, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, i: (b, h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, S, D), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, D), jnp.float32),
+            pltpu.VMEM((bk, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    dk_h, dv_h = dkv
+    dk = dk_h.reshape(B, Hkv, group, S, D).sum(axis=2).astype(k.dtype)
+    dv = dv_h.reshape(B, Hkv, group, S, D).sum(axis=2).astype(v.dtype)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **common),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

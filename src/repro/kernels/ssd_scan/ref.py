@@ -1,0 +1,46 @@
+"""Pure-jnp sequential-scan oracle for the SSD kernel (and the model's
+reference/decode path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_ref", "ssd_step"]
+
+
+def ssd_step(state, x_t, dt_t, a, b_t, c_t):
+    """One recurrence step.  state [H, N, P]; x_t [H, P]; dt_t [H];
+    a [H]; b_t/c_t [G, N].  Returns (state', y_t [H, P])."""
+    H = x_t.shape[0]
+    G = b_t.shape[0]
+    hg = H // G
+    bh = jnp.repeat(b_t, hg, axis=0)            # [H, N]
+    ch = jnp.repeat(c_t, hg, axis=0)
+    decay = jnp.exp(dt_t * a)                   # [H]
+    upd = jnp.einsum("hn,hp->hnp", bh, x_t * dt_t[:, None])
+    state = decay[:, None, None] * state + upd
+    y = jnp.einsum("hn,hnp->hp", ch, state)
+    return state, y
+
+
+def ssd_ref(x, dt, a, b, c):
+    """x [B,S,H,P], dt [B,S,H], a [H], b/c [B,S,G,N] ->
+    (y [B,S,H,P], final_state [B,H,N,P])."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+
+    def scan_one(x_b, dt_b, b_b, c_b):
+        def step(st, inp):
+            xt, dtt, bt, ct = inp
+            st, y = ssd_step(st, xt, dtt, a, bt, ct)
+            return st, y
+        st0 = jnp.zeros((H, N, P), jnp.float32)
+        st, ys = jax.lax.scan(step, st0, (x_b.astype(jnp.float32),
+                                          dt_b.astype(jnp.float32),
+                                          b_b.astype(jnp.float32),
+                                          c_b.astype(jnp.float32)))
+        return ys, st
+
+    ys, st = jax.vmap(scan_one)(x, dt, b, c)
+    return ys.astype(x.dtype), st

@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, dry-run, train/serve drivers."""
+from .mesh import make_mesh, make_production_mesh
+__all__ = ["make_mesh", "make_production_mesh"]

@@ -1,0 +1,37 @@
+"""Mesh construction.  A FUNCTION, not a module-level constant: importing
+this module never touches jax device state."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes_of", "model_axis_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The production TPU v5e target: one 16x16 pod (256 chips) or two
+    pods = 512 chips with a leading DCN ``pod`` axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...],
+              axes: Optional[Tuple[str, ...]] = None) -> jax.sharding.Mesh:
+    """Arbitrary mesh helper (tests, CPU runs, elasticity experiments)."""
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):] if len(shape) <= 3 \
+            else tuple(f"ax{i}" for i in range(len(shape)))
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_of(mesh: jax.sharding.Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None

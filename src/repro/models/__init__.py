@@ -1,0 +1,16 @@
+"""Model zoo: composable blocks (GQA/MLA attention, SwiGLU, MoE-EP,
+Mamba-2 SSD) assembled into decoder-only / enc-dec LMs via scan groups."""
+
+from .blocks import Runtime
+from .config import BlockCfg, Group, MLACfg, ModelConfig
+from .lm import (count_params, decode_step, forward, init_caches,
+                 init_params, loss_fn, model_flops, prefill)
+from .mamba import MambaConfig
+from .moe import MoEConfig
+
+__all__ = [
+    "Runtime", "BlockCfg", "Group", "MLACfg", "ModelConfig",
+    "MambaConfig", "MoEConfig",
+    "init_params", "forward", "loss_fn", "prefill", "decode_step",
+    "init_caches", "count_params", "model_flops",
+]

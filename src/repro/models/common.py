@@ -1,0 +1,81 @@
+"""Shared model machinery: norms, RoPE, initialisers, dtype policy."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DtypePolicy", "rms_norm", "layer_norm", "apply_rope",
+           "rope_freqs", "dense_init", "sinusoidal_positions"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    param: Any = jnp.float32
+    compute: Any = jnp.bfloat16
+    accum: Any = jnp.float32
+
+    def cast_in(self, x):
+        return x.astype(self.compute)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in f32 (gemma uses (1 + w) scaling: ``plus_one``)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] (int).  Half-split convention."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [B, S, d/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq_len, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32,
+               scale: float = 1.0) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LeCun-ish), stable across dtypes."""
+    fan_in = shape[in_axis] if shape else 1
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)

@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD) mixer: chunked-scan training path, recurrent decode path.
+
+The training/prefill path evaluates the SSD chunk algebra with a
+``lax.scan`` over chunks (identical math to the Pallas kernel in
+``repro.kernels.ssd_scan``; the kernel is selected with ``impl='kernel'``
+on TPU runtimes).  Sub-quadratic in sequence length: O(S*L) with chunk
+length L, which is what makes the 500k-token cells feasible.
+
+Decode is the O(1)-per-token recurrence on the [H, N, P] state plus the
+width-4 depthwise-conv ring buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import dense_init, rms_norm
+
+__all__ = ["MambaConfig", "mamba_params", "mamba_apply", "mamba_decode_step",
+           "mamba_init_cache"]
+
+CONV_W = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 128          # N
+    expand: int = 2
+    head_dim: int = 64          # P
+    n_groups: int = 1           # G
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba_params(key, cfg: MambaConfig, dtype=jnp.float32) -> dict:
+    """Per-component input projections (z, x, B, C, dt) instead of the
+    reference's fused in_proj: each projection then has a TP-shardable
+    output dim (the fused inner dim 2*Di+2*G*N+H rarely divides a mesh
+    axis)."""
+    ks = jax.random.split(key, 8)
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    return {
+        "in_z": dense_init(ks[0], (cfg.d_model, di), dtype=dtype),
+        "in_x": dense_init(ks[1], (cfg.d_model, di), dtype=dtype),
+        "in_b": dense_init(ks[2], (cfg.d_model, g * n), dtype=dtype),
+        "in_c": dense_init(ks[3], (cfg.d_model, g * n), dtype=dtype),
+        "in_dt": dense_init(ks[4], (cfg.d_model, h), dtype=dtype),
+        "conv_w": dense_init(ks[5], (CONV_W, cfg.conv_dim), dtype=dtype,
+                             scale=1.0),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[6], (di, cfg.d_model), dtype=dtype),
+    }
+
+
+def _project(params, x_in):
+    return (x_in @ params["in_z"], x_in @ params["in_x"],
+            x_in @ params["in_b"], x_in @ params["in_c"],
+            x_in @ params["in_dt"])
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv, width CONV_W.  xbc [B, S, C]."""
+    pad = jnp.pad(xbc, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(CONV_W))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_chunked(x, dt, a, bmat, cmat, cfg: MambaConfig,
+                 state0: Optional[jnp.ndarray] = None):
+    """Chunk-parallel SSD (same algebra as the Pallas kernel), scanning
+    chunks.  x [B,S,H,P]; dt [B,S,H]; a [H]; b/c [B,S,G,N].
+    Returns (y, final_state [B,H,N,P])."""
+    B, S, H, P = x.shape
+    G, N = bmat.shape[2], bmat.shape[3]
+    L = min(cfg.chunk, S)
+    nc = S // L
+    assert S % L == 0, (S, L)
+    hg = H // G
+
+    # NOTE(perf, refuted): casting the matmul operands to bf16 was tried
+    # (§Perf B-iter2) — correct on TPU, but the CPU-derived traffic
+    # census regressed 14% from legalisation copies and bf16 noise broke
+    # the 1e-4 oracle tolerance; kept in f32.
+    xf = x.astype(jnp.float32).reshape(B, nc, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, L, H)
+    bf = bmat.astype(jnp.float32).reshape(B, nc, L, G, N)
+    cf = cmat.astype(jnp.float32).reshape(B, nc, L, G, N)
+    bf = jnp.repeat(bf, hg, axis=3)      # [B,nc,L,H,N]
+    cf = jnp.repeat(cf, hg, axis=3)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc = inp            # [B,L,H,P], [B,L,H], [B,L,H,N] x2
+        dA = dtc * a[None, None, :]      # [B,L,H]
+        cum = jnp.cumsum(dA, axis=1)     # [B,L,H]
+        cb = jnp.einsum("bihn,bjhn->bhij", cc, bc)
+        seg = cum.transpose(0, 2, 1)[:, :, :, None] \
+            - cum.transpose(0, 2, 1)[:, :, None, :]        # [B,H,i,j]
+        # clamp the non-causal (positive) segment sums *before* exp so the
+        # masked entries cannot poison the backward pass with inf * 0
+        seg = jnp.where(causal[None, None], seg, -1e30)
+        m = cb * jnp.exp(seg) * dtc.transpose(0, 2, 1)[:, :, None, :]
+        y = jnp.einsum("bhij,bjhp->bihp", m, xc)
+        # inter-chunk
+        y += jnp.einsum("bihn,bhnp,bih->bihp", cc, state, jnp.exp(cum))
+        cl = cum[:, -1, :]               # [B,H]
+        decay_end = jnp.exp(cl[:, None, :] - cum) * dtc       # [B,L,H]
+        s_new = jnp.exp(cl)[:, :, None, None] * state \
+            + jnp.einsum("bjhn,bjhp->bhnp", bc * decay_end[..., None], xc)
+        return s_new, y
+
+    st0 = state0 if state0 is not None else jnp.zeros((B, H, N, P),
+                                                      jnp.float32)
+    stf, ys = lax.scan(chunk_step, st0,
+                       (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+                        jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y, stf
+
+
+def mamba_apply(params: dict, x_in: jnp.ndarray, cfg: MambaConfig, *,
+                impl: str = "chunked") -> jnp.ndarray:
+    """Full Mamba-2 block (minus the outer residual): x [B, S, D]."""
+    B, S, D = x_in.shape
+    h, p, g, n = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    z, xr, b, c, dt = _project(params, x_in)
+    xbc = jnp.concatenate([xr, b, c], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xr = xbc[..., :cfg.d_inner]
+    b = xbc[..., cfg.d_inner:cfg.d_inner + g * n]
+    c = xbc[..., cfg.d_inner + g * n:]
+
+    dt_v = jax.nn.softplus(dt.astype(jnp.float32)
+                           + params["dt_bias"][None, None, :])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])                                # [H]
+    xh = xr.reshape(B, S, h, p)
+    bg = b.reshape(B, S, g, n)
+    cg = c.reshape(B, S, g, n)
+
+    if impl == "kernel":
+        from repro.kernels.ssd_scan.ops import ssd
+        y = ssd(xh, dt_v, a, bg, cg, chunk=cfg.chunk)
+    else:
+        y, _ = _ssd_chunked(xh, dt_v, a, bg, cg, cfg)
+    y = y.astype(x_in.dtype) + xh.astype(x_in.dtype) \
+        * params["d_skip"].astype(x_in.dtype)[None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    return y @ params["out_proj"]
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def mamba_init_cache(batch: int, cfg: MambaConfig, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, cfg.conv_dim), dtype),
+    }
+
+
+def mamba_decode_step(params: dict, x_t: jnp.ndarray, cache: dict,
+                      cfg: MambaConfig) -> Tuple[jnp.ndarray, dict]:
+    """x_t [B, D] one token.  Returns (y [B, D], new cache)."""
+    B, D = x_t.shape
+    h, p, g, n = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    z, xr, b, c, dt = _project(params, x_t)
+    xbc = jnp.concatenate([xr, b, c], axis=-1)                # [B, conv_dim]
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv = sum(window[:, i, :] * params["conv_w"][i][None, :]
+               for i in range(CONV_W))
+    xbc = jax.nn.silu(conv + params["conv_b"][None, :])
+    xr = xbc[:, :cfg.d_inner]
+    b = xbc[:, cfg.d_inner:cfg.d_inner + g * n].reshape(B, g, n)
+    c = xbc[:, cfg.d_inner + g * n:].reshape(B, g, n)
+
+    dt_v = jax.nn.softplus(dt.astype(jnp.float32)
+                           + params["dt_bias"][None, :])      # [B, H]
+    a = -jnp.exp(params["a_log"])
+    xh = xr.reshape(B, h, p).astype(jnp.float32)
+    hg = h // g
+    bh = jnp.repeat(b, hg, axis=1).astype(jnp.float32)        # [B, H, N]
+    ch = jnp.repeat(c, hg, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt_v * a[None, :])                        # [B, H]
+    upd = jnp.einsum("bhn,bhp->bhnp", bh, xh * dt_v[..., None])
+    ssm = decay[:, :, None, None] * cache["ssm"] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", ch, ssm)
+    y = y.astype(x_t.dtype) + xh.astype(x_t.dtype) \
+        * params["d_skip"].astype(x_t.dtype)[None, :, None]
+    y = y.reshape(B, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = (y @ params["out_proj"]).astype(x_t.dtype)
+    new_cache = {"ssm": ssm, "conv": window[:, 1:, :]}
+    return out, new_cache

@@ -1,0 +1,23 @@
+"""Optimizers + gradient compression."""
+
+from .adafactor import AdafactorConfig, adafactor_init, adafactor_update
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .compress import ef_compress, ef_decompress, ef_init
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    """Standard warmup + cosine decay schedule."""
+    import jax.numpy as jnp
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "AdafactorConfig", "adafactor_init", "adafactor_update",
+           "ef_compress", "ef_decompress", "ef_init", "warmup_cosine"]

@@ -1,0 +1,48 @@
+"""Gradient compression with error feedback (the COMPRESSED sync
+attribute's convergence-safe companion).
+
+``ef_compress``: quantise (grad + residual) to int8 per-leaf, return the
+quantised update and the *new* residual (what quantisation lost).  The
+residual rides in the optimizer state, so information is delayed, never
+destroyed — stale-synchronous in spirit, per the paper's future-work
+refs [1, 16].
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_init", "ef_compress", "ef_decompress"]
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q(leaf):
+    scale = jnp.max(jnp.abs(leaf)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(leaf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress(grads, residual) -> Tuple[dict, dict, dict]:
+    """Returns (q_grads int8, scales, new_residual)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _q(x)
+        deq = q.astype(jnp.float32) * s
+        return q, s, x - deq
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]),
+            jax.tree.unflatten(treedef, [o[2] for o in out]))
+
+
+def ef_decompress(q_grads, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_grads, scales)

@@ -1,0 +1,5 @@
+"""Runtime: step builders, training loop, straggler monitor."""
+from .monitor import StepVerdict, StragglerMonitor
+from .train_step import ServeStep, TrainStep, build_serve_step, build_train_step
+__all__ = ["StepVerdict", "StragglerMonitor", "ServeStep", "TrainStep",
+           "build_serve_step", "build_train_step"]

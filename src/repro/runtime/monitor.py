@@ -1,0 +1,78 @@
+"""Straggler detection from BSP superstep timing.
+
+Bulk-synchrony makes stragglers *observable*: every step ends at a
+barrier, so per-step wall time is exactly max over workers of their work
+time.  The monitor keeps an EWMA mean/variance of step durations and
+flags z-score outliers; the mitigation policy escalates:
+
+  observe -> flag (log) -> skip-sync (stale step, bounded count) ->
+  request elastic rescale (drop the worker, restore on a smaller mesh).
+
+On the CPU container we obviously host one worker; the detector is
+exercised in tests by injecting synthetic delays, and the policy output
+feeds ``train_loop``'s recovery path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+__all__ = ["StragglerMonitor", "StepVerdict"]
+
+
+@dataclasses.dataclass
+class StepVerdict:
+    step: int
+    duration: float
+    z: float
+    straggle: bool
+    action: str          # "ok" | "flag" | "skip_sync" | "rescale"
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.1, z_flag: float = 3.0,
+                 z_skip: float = 6.0, max_skips: int = 3,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.z_flag = z_flag
+        self.z_skip = z_skip
+        self.max_skips = max_skips
+        self.warmup = warmup
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.consecutive_skips = 0
+        self.history: List[StepVerdict] = []
+
+    def record(self, step: int, duration: float) -> StepVerdict:
+        self.n += 1
+        if self.mean is None:
+            self.mean = duration
+            v = StepVerdict(step, duration, 0.0, False, "ok")
+            self.history.append(v)
+            return v
+        # relative floor: sub-10%-of-mean jitter is never a straggle
+        std = max(math.sqrt(self.var) if self.var > 0 else 0.0,
+                  0.1 * abs(self.mean))
+        z = (duration - self.mean) / max(std, 1e-9)
+        straggle = self.n > self.warmup and z > self.z_flag
+        if straggle and self.n > self.warmup and z > self.z_skip:
+            self.consecutive_skips += 1
+            action = ("rescale" if self.consecutive_skips > self.max_skips
+                      else "skip_sync")
+        elif straggle:
+            action = "flag"
+            self.consecutive_skips = 0
+        else:
+            action = "ok"
+            self.consecutive_skips = 0
+        # update EWMA only with non-outlier steps (don't poison the model)
+        if not straggle:
+            d = duration - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        v = StepVerdict(step, duration, z, straggle, action)
+        self.history.append(v)
+        return v

@@ -1,0 +1,246 @@
+"""Train/serve step builders: shardings, optimizer wiring, LPF grad sync.
+
+Two gradient-sync modes:
+
+* ``gspmd`` — pure jit: GSPMD inserts the reduce-scatter/all-reduce
+  pattern implied by the parameter shardings (the optimised baseline).
+* ``lpf``   — the step runs *manual over the pod axis* (partial
+  shard_map): backward produces pod-local gradients, and the DCN hop is
+  an explicit LPF superstep program (``bsp.pod_sync``) honouring sync
+  attributes (int8 compression; staleness is handled by the local-SGD
+  outer loop which simply skips the sync).  Intra-pod reduction stays on
+  GSPMD/ICI — a two-level hierarchical all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.bsp.pod_sync import pod_allreduce
+from repro.core import CostLedger, LPF_SYNC_DEFAULT, SyncAttributes
+from repro.models import Runtime, init_params, loss_fn, decode_step, init_caches
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sharding.rules import batch_specs, cache_specs, param_specs
+from repro.launch.mesh import dp_axes_of, model_axis_of
+
+__all__ = ["TrainStep", "build_train_step", "ServeStep", "build_serve_step"]
+
+
+@dataclasses.dataclass
+class TrainStep:
+    """Compiled pieces + specs (also consumed by dryrun/roofline)."""
+    step_fn: Any                 # (params, opt, batch) -> (params, opt, metrics)
+    init_fn: Any                 # (key) -> (params, opt)
+    param_sharding: Any
+    opt_sharding: Any
+    batch_sharding: Any
+    rt: Runtime
+    ledger: CostLedger
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train_step(cfg: ModelConfig, mesh, *,
+                     opt_cfg: AdamWConfig = AdamWConfig(),
+                     grad_sync: str = "gspmd",
+                     sync_attrs: SyncAttributes = LPF_SYNC_DEFAULT,
+                     grad_accum: int = 1,
+                     axis_roles: str = "fsdp_tp",
+                     donate: bool = True) -> TrainStep:
+    dp = dp_axes_of(mesh)
+    if axis_roles == "dp_all":
+        # axis-role remap for small models: the model axis carries extra
+        # data parallelism; params keep ZeRO over `data` only
+        batch_axes = tuple(a for a in ("pod", "data", "model")
+                           if a in mesh.axis_names)
+        param_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+        rt = Runtime(mesh, dp_axes=batch_axes, model_axis=None, sp=False)
+    else:
+        batch_axes = dp
+        param_axes = None
+        rt = Runtime(mesh, dp_axes=dp, model_axis=model_axis_of(mesh),
+                     sp=True)
+    ledger = CostLedger()
+    key = jax.random.PRNGKey(0)
+
+    p_shapes = jax.eval_shape(partial(init_params, cfg=cfg), key)
+    pspecs = param_specs(p_shapes, mesh, axes=param_axes)
+    o_shapes = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), p_shapes)
+    ospecs = param_specs(o_shapes, mesh, axes=param_axes)
+
+    npods = mesh.shape.get("pod", 1)
+
+    def constrain_grads(grads):
+        # pin gradients to the parameter sharding so the FSDP
+        # reduce-scatter happens inside the layer loop, not as a giant
+        # unsharded stacked buffer afterwards
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, s)), grads, pspecs)
+
+    def loss_and_grads(params, batch, rt_=None, constrain=True):
+        """Microbatched (gradient-accumulated) loss/grads: activation
+        memory scales by 1/k at unchanged arithmetic — how the widest
+        configs fit 16 GB/chip at global batch 256."""
+        rt_ = rt_ or rt
+        cg = constrain_grads if constrain else (lambda g: g)
+        if grad_accum <= 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, rt_))(params)
+            return loss, cg(grads)
+
+        micro = jax.tree.map(
+            lambda l: l.reshape((grad_accum, l.shape[0] // grad_accum)
+                                + l.shape[1:]), batch)
+
+        def acc_step(carry, mb):
+            loss_acc, g_acc = carry
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, mb, cfg, rt_))(params)
+            grads = cg(grads)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                 g_acc, grads)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = cg(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            acc_step, (jnp.zeros((), jnp.float32), g0), micro)
+        k = float(grad_accum)
+        return loss_sum / k, jax.tree.map(lambda g: g / k, g_sum)
+
+    def plain_step(params, opt, batch):
+        loss, grads = loss_and_grads(params, batch)
+        params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    if grad_sync == "lpf" and npods > 1:
+        # XLA workaround: with_sharding_constraint over Auto axes inside a
+        # partial-manual (pod) region CHECK-fails in the SPMD partitioner
+        # (spmd_partitioner_util.cc:504, verified by bisection), so the
+        # loss runs without internal activation constraints here; GSPMD
+        # propagates shardings freely.  The gspmd baseline path (and the
+        # whole dry-run matrix) keeps the constraints + SP.
+        rt_pod = Runtime()
+
+        def pod_body(params, opt, batch):
+            loss, grads = loss_and_grads(params, batch, rt_pod,
+                                         constrain=False)
+            grads = pod_allreduce(grads, npods, "pod", attrs=sync_attrs,
+                                  mean=True, ledger=ledger)
+            loss = jax.lax.pmean(loss, "pod")
+            params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
+            metrics["loss"] = loss
+            return params, opt, metrics
+
+        rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+
+        def step_core(params, opt, batch):
+            bspecs = jax.tree.map(
+                lambda l: P("pod", *([None] * (l.ndim - 1))), batch)
+            fn = jax.shard_map(
+                pod_body, mesh=mesh,
+                in_specs=(rep(params), rep(opt), bspecs),
+                out_specs=(rep(params), rep(opt),
+                           {"grad_norm": P(), "lr": P(), "loss": P()}),
+                axis_names={"pod"}, check_vma=False)
+            return fn(params, opt, batch)
+    else:
+        step_core = plain_step
+
+    p_shard = _shardings(pspecs, mesh)
+    o_shard = _shardings(ospecs, mesh)
+
+    def make_batch_sharding(batch_shapes):
+        return _shardings(batch_specs(batch_shapes, mesh,
+                                      dp_axes=batch_axes), mesh)
+
+    def init_fn(k):
+        params = init_params(k, cfg)
+        return params, adamw_init(params, opt_cfg)
+
+    init_jit = jax.jit(init_fn, out_shardings=(p_shard, o_shard))
+
+    step_jit = jax.jit(
+        step_core,
+        donate_argnums=(0, 1) if donate else (),
+        in_shardings=(p_shard, o_shard, None),
+        out_shardings=(p_shard, o_shard, None),
+    )
+    return TrainStep(step_fn=step_jit, init_fn=init_jit,
+                     param_sharding=p_shard, opt_sharding=o_shard,
+                     batch_sharding=make_batch_sharding, rt=rt,
+                     ledger=ledger)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeStep:
+    step_fn: Any                 # (params, caches, token, pos[, enc]) -> ...
+    param_sharding: Any
+    cache_sharding: Any
+    rt: Runtime
+
+
+def build_serve_step(cfg: ModelConfig, mesh, *, global_batch: int,
+                     cache_len: int,
+                     batch_axes: Optional[Tuple[str, ...]] = None,
+                     seq_axes: Optional[Tuple[str, ...]] = None,
+                     param_axes: Optional[Tuple[str, ...]] = None,
+                     donate_cache: bool = True) -> ServeStep:
+    axes = tuple(mesh.axis_names)
+    if batch_axes is None:
+        dp = dp_axes_of(mesh)
+        total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        batch_axes = dp if dp and global_batch % total == 0 else ()
+    if seq_axes is None:
+        seq_axes = ("model",) if "model" in axes else ()
+        if not batch_axes:   # batch can't shard -> widen sequence sharding
+            seq_axes = tuple(a for a in ("pod", "data", "model")
+                             if a in axes)
+    rt = Runtime(mesh, dp_axes=batch_axes, model_axis=model_axis_of(mesh),
+                 seq_axes=seq_axes)
+
+    p_shapes = jax.eval_shape(partial(init_params, cfg=cfg),
+                              jax.random.PRNGKey(0))
+    pspecs = param_specs(p_shapes, mesh, axes=param_axes)
+    c_shapes = jax.eval_shape(
+        lambda: init_caches(cfg, global_batch, cache_len))
+    cspecs = cache_specs(c_shapes, mesh, batch_axes=batch_axes,
+                         seq_axes=seq_axes)
+    p_shard = _shardings(pspecs, mesh)
+    c_shard = _shardings(cspecs, mesh)
+    tok_shard = NamedSharding(mesh, P(batch_axes or None))
+    pos_shard = NamedSharding(mesh, P())
+
+    def serve(params, caches, token, pos, enc_out=None):
+        nxt, logits, new_caches = decode_step(params, token, caches, pos,
+                                              cfg, rt, enc_out)
+        return nxt, new_caches
+
+    in_sh = [p_shard, c_shard, tok_shard, pos_shard]
+    if cfg.encoder_groups:
+        in_sh.append(NamedSharding(mesh, P(batch_axes or None, None, None)))
+    step_jit = jax.jit(
+        serve,
+        donate_argnums=(1,) if donate_cache else (),
+        in_shardings=tuple(in_sh),
+        out_shardings=(tok_shard, c_shard),
+    )
+    return ServeStep(step_fn=step_jit, param_sharding=p_shard,
+                     cache_sharding=c_shard, rt=rt)

@@ -1,0 +1,161 @@
+"""Parameter/activation partition rules: logical roles -> mesh axes.
+
+The production mesh is ``(pod, data, model)``: ``pod`` is pure DP across
+slices (DCN), ``data`` carries DP + ZeRO/FSDP parameter sharding, and
+``model`` carries TP (attention heads / FFN hidden), EP (experts) and SP
+(KV-cache sequence sharding for decode).  Rules are attached by
+*parameter name*, so every architecture in the zoo shares one rule set;
+meshes of any shape re-map without code changes (drop an axis and the
+specs degrade gracefully — that is the elasticity story).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["param_spec", "param_specs", "batch_specs", "cache_specs",
+           "DP_AXES", "MODEL_AXIS"]
+
+DP_AXES: Tuple[str, ...] = ("pod", "data")
+MODEL_AXIS = "model"
+
+#: name -> (spec for the *unstacked* param); a leading None is prepended
+#: automatically for scan-stacked leaves inside block groups.
+_BY_NAME = {
+    # embeddings / head — the table shards on d_model over `data`
+    # (replicated over model): the gather backward then produces
+    # [V, D/|data|] partials instead of a full-table f32 partial per
+    # device (5 GB for the 150k-vocab configs)
+    "embed": P("model", "data"),
+    "head": P("data", "model"),
+    "pos_embed": P(None, None),
+    "mtp_proj": P("data", "model"),
+    # attention
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    "bq": P("model"),
+    "bk": P("model"),
+    "bv": P("model"),
+    # MLA
+    "wq_a": P("data", None),
+    "wq_b": P(None, "model"),
+    "wkv_a": P("data", None),
+    "wkv_b": P(None, "model"),
+    # dense mlp
+    "w_gate": P("data", "model"),
+    "w_up": P("data", "model"),
+    "w_down": P("model", "data"),
+    # mamba: per-component projections (the fused in_proj of the
+    # reference implementation has a non-divisible inner dim)
+    "in_z": P("data", "model"),
+    "in_x": P("data", "model"),
+    "in_b": P("data", None),
+    "in_c": P("data", None),
+    "in_dt": P("data", None),
+    "out_proj": P("model", "data"),
+    "conv_w": P(None, None),
+    "conv_b": P(None),
+    # moe (4-D expert-stacked leaves are special-cased below); the
+    # router is small and every shard routes all tokens -> replicated
+    "router": P(None, None),
+}
+
+#: inside a "moe" subtree the expert dim leads
+_MOE_EXPERT = {
+    "w_gate": P("model", "data", None),
+    "w_up": P("model", "data", None),
+    "w_down": P("model", None, "data"),
+}
+
+
+def _path_names(path) -> list:
+    return [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+
+
+def param_spec(path, leaf, mesh_axes: Tuple[str, ...]) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    in_group = any(n.startswith("dec_") or n.startswith("enc_")
+                   for n in names)
+    in_moe = "moe" in names
+    if in_moe and name in _MOE_EXPERT:
+        spec = _MOE_EXPERT[name]
+    elif name in _BY_NAME:
+        spec = _BY_NAME[name]
+    else:
+        spec = P()  # norms, scalars, biases of norms: replicated
+    # drop axes the mesh does not have
+    parts = tuple(p if (p is None or p in mesh_axes) else None
+                  for p in spec)
+    # scan-stacked leaves carry a leading layer dim
+    expected = leaf.ndim - (1 if in_group else 0)
+    parts = parts[:expected] if len(parts) >= expected \
+        else parts + (None,) * (expected - len(parts))
+    if in_group:
+        parts = (None,) + parts
+    return P(*parts)
+
+
+def param_specs(params, mesh: jax.sharding.Mesh, axes=None):
+    """Pytree of PartitionSpecs congruent with ``params``.  ``axes``
+    optionally restricts which mesh axes participate (axis-role
+    remapping: e.g. axes=("data",) turns TP off for small models;
+    axes=("model",) gives the TP-only serving layout)."""
+    axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, axes), params)
+
+
+def batch_specs(batch, mesh: jax.sharding.Mesh,
+                dp_axes: Optional[Tuple[str, ...]] = None):
+    """Inputs: batch dim over the dp axes, everything else replicated."""
+    axes = tuple(a for a in (dp_axes or DP_AXES) if a in mesh.axis_names)
+    return jax.tree.map(
+        lambda leaf: P(axes, *([None] * (leaf.ndim - 1))), batch)
+
+
+def cache_specs(caches, mesh: jax.sharding.Mesh, *,
+                batch_axes: Tuple[str, ...], seq_axes: Tuple[str, ...]):
+    """KV/state caches: [L, B, S, ...] -> batch over batch_axes, seq over
+    seq_axes; mamba states [L, B, H, N, P] shard heads over model."""
+    axes = set(mesh.axis_names)
+    b_ax = tuple(a for a in batch_axes if a in axes) or None
+    s_ax = tuple(a for a in seq_axes if a in axes) or None
+
+    def _fits(dim: int, ax) -> bool:
+        if ax is None:
+            return False
+        sizes = [mesh.shape[a] for a in (ax if isinstance(ax, tuple)
+                                         else (ax,))]
+        return dim % int(np.prod(sizes)) == 0
+
+    model = MODEL_AXIS if "model" in axes else None
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name in ("k", "v"):          # [L, B, S, Hkv, hd]
+            return P(None, b_ax, s_ax if _fits(leaf.shape[2], s_ax)
+                     else None, None, None)
+        if name in ("ckv", "krope"):    # [L, B, S, C]
+            return P(None, b_ax, s_ax if _fits(leaf.shape[2], s_ax)
+                     else None, None)
+        if name == "ssm":               # [L, B, H, N, P]: prefer heads,
+            # else the state dim; else replicate (states are tiny)
+            if _fits(leaf.shape[2], model):
+                return P(None, b_ax, model, None, None)
+            if _fits(leaf.shape[3], model):
+                return P(None, b_ax, None, model, None)
+            return P(None, b_ax, None, None, None)
+        if name == "conv":              # [L, B, W, C]
+            return P(None, b_ax, None,
+                     model if _fits(leaf.shape[3], model) else None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, caches)

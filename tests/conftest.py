@@ -1,0 +1,34 @@
+"""Test fixtures.
+
+Eight host devices are enabled HERE ONLY (not globally/pyproject): the
+LPF semantics/property tests need p > 1 SPMD processes, while the model
+smoke tests are sharding-free (device-count agnostic, everything lands on
+device 0).  The 512-device production override belongs exclusively to
+``repro.launch.dryrun`` (its first two lines), never to the test session.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((8,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+@pytest.fixture(scope="session")
+def mesh_pdm():
+    """Tiny (pod, data, model) mesh for multi-axis tests."""
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

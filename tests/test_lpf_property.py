@@ -1,0 +1,140 @@
+"""Property-based tests: random h-relations vs a numpy oracle.
+
+The system invariant under test is the LPF contract itself: *any* legal
+static message table, executed by any method, produces the CRCW result
+(ascending-source-PID sequential application) and its ledger records the
+exact BSP h-relation of the pattern.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import core as lpf
+from repro.core import SyncAttributes
+
+P_PROCS = 8
+SLOT = 16
+
+
+@st.composite
+def h_relations(draw):
+    n_msgs = draw(st.integers(1, 12))
+    msgs = []
+    for _ in range(n_msgs):
+        src = draw(st.integers(0, P_PROCS - 1))
+        dst = draw(st.integers(0, P_PROCS - 1))
+        size = draw(st.integers(1, 6))
+        src_off = draw(st.integers(0, SLOT - size))
+        dst_off = draw(st.integers(0, SLOT - size))
+        msgs.append((src, dst, src_off, dst_off, size))
+    return msgs
+
+
+def oracle(msgs):
+    """Sequential CRCW application in (src, dst, dst_off) order."""
+    src_vals = np.stack([np.arange(SLOT) + 100.0 * s
+                         for s in range(P_PROCS)])
+    dst_vals = np.full((P_PROCS, SLOT), -1.0)
+    for (s, d, so, do, sz) in sorted(msgs,
+                                     key=lambda m: (m[0], m[1], m[3])):
+        dst_vals[d, do:do + sz] = src_vals[s, so:so + sz]
+    return dst_vals
+
+
+def h_relation_bytes(msgs):
+    sent = np.zeros(P_PROCS)
+    recv = np.zeros(P_PROCS)
+    for (s, d, so, do, sz) in msgs:
+        if s != d:
+            sent[s] += sz * 4
+            recv[d] += sz * 4
+    return int(max(sent.max(), recv.max()))
+
+
+def run_relation(mesh8, msgs, attrs):
+    def spmd(ctx, s, p, _):
+        ctx.resize_memory_register(3)
+        ctx.resize_message_queue(4 * len(msgs), valiant_payload=256)
+        src = ctx.register_global("src",
+                                  jnp.arange(SLOT, dtype=jnp.float32)
+                                  + 100.0 * ctx.pid)
+        dst = ctx.register_global("dst", jnp.full(SLOT, -1.0))
+        ctx.put_msgs([(s_, d, src, so, dst, do, sz)
+                      for (s_, d, so, do, sz) in msgs])
+        ctx.sync(attrs)
+        return ctx.tensor(dst)
+
+    out, ledger = lpf.exec_(mesh8, spmd, out_specs=P("x"),
+                            return_ledger=True)
+    return np.asarray(out).reshape(P_PROCS, SLOT), ledger
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(h_relations())
+def test_random_h_relation_direct(mesh8, msgs):
+    out, ledger = run_relation(mesh8, msgs, SyncAttributes(method="direct"))
+    np.testing.assert_allclose(out, oracle(msgs))
+    assert ledger.records[0].h_bytes == h_relation_bytes(msgs)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(h_relations())
+def test_random_h_relation_valiant(mesh8, msgs):
+    # valiant routes conflicting writes through intermediates and cannot
+    # preserve CRCW source order: restrict to conflict-free tables (the
+    # documented contract for two-phase routing)
+    filtered = []
+    for m in msgs:
+        s_, d, so, do, sz = m
+        clash = any(d == f[1] and do < f[3] + f[4] and f[3] < do + sz
+                    for f in filtered)
+        if not clash:
+            filtered.append(m)
+    out, _ = run_relation(mesh8, filtered, SyncAttributes(method="valiant"))
+    np.testing.assert_allclose(out, oracle(filtered))
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.permutations(list(range(P_PROCS))), st.integers(1, SLOT))
+def test_permutation_methods_equivalent(mesh8, perm, size):
+    """direct and bruck must agree on any full permutation."""
+    results = []
+    for method in ("direct", "bruck"):
+        def spmd(ctx, s, p, _, method=method):
+            ctx.resize_memory_register(2)
+            ctx.resize_message_queue(p)
+            src = ctx.register_global(
+                "src", jnp.arange(SLOT, dtype=jnp.float32)
+                + 100.0 * ctx.pid)
+            dst = ctx.register_global("dst", jnp.full(SLOT, -1.0))
+            ctx.put(src, dst, to=lambda s: perm[s], size=size)
+            ctx.sync(SyncAttributes(method=method))
+            return ctx.tensor(dst)
+        out = lpf.exec_(mesh8, spmd, out_specs=P("x"))
+        results.append(np.asarray(out).reshape(P_PROCS, SLOT))
+    np.testing.assert_allclose(results[0], results[1])
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=8, max_size=64))
+def test_allreduce_matches_numpy(mesh8, vals):
+    from repro import bsp
+    base = np.asarray(vals, np.float32)
+
+    def spmd(ctx, s, p, _):
+        x = jnp.asarray(base) * (1.0 + ctx.pid.astype(jnp.float32))
+        return bsp.allreduce(ctx, x)
+
+    out = np.asarray(lpf.exec_(mesh8, spmd, out_specs=P("x")))
+    out = out.reshape(P_PROCS, -1)
+    want = base * sum(1.0 + i for i in range(P_PROCS))
+    for row in out:
+        np.testing.assert_allclose(row, want, rtol=2e-4, atol=1e-3)

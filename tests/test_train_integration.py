@@ -1,0 +1,131 @@
+"""End-to-end: distributed train steps on a tiny mesh, loss decrease,
+checkpoint/resume determinism, LPF cross-pod sync + local SGD."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticStream
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import TrainLoopConfig, train_loop
+from repro.runtime.train_step import build_serve_step, build_train_step
+
+
+def tiny_cfg():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    return dataclasses.replace(cfg, vocab=256)
+
+
+def mesh_dm():
+    return jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def stream_for(cfg, B=8, S=32):
+    return SyntheticStream(DataConfig(vocab=cfg.vocab, seq_len=S,
+                                      global_batch=B, seed=0), cfg)
+
+
+def test_train_loss_decreases(tmp_path):
+    cfg = tiny_cfg()
+    mesh = mesh_dm()
+    ts = build_train_step(cfg, mesh, opt_cfg=AdamWConfig(lr=3e-3))
+    out = train_loop(ts, stream_for(cfg),
+                     TrainLoopConfig(steps=30, ckpt_dir=None))
+    first = np.mean(out["losses"][:5])
+    last = np.mean(out["losses"][-5:])
+    assert np.isfinite(last)
+    assert last < first - 0.2, (first, last)
+
+
+def test_checkpoint_resume_bitexact(tmp_path):
+    cfg = tiny_cfg()
+    mesh = mesh_dm()
+    ts = build_train_step(cfg, mesh, opt_cfg=AdamWConfig(lr=1e-3),
+                          donate=False)
+    stream = stream_for(cfg)
+    # run 1: 10 steps with a checkpoint at 5
+    out_a = train_loop(ts, stream, TrainLoopConfig(
+        steps=10, ckpt_dir=str(tmp_path / "a"), ckpt_every=5))
+    # run 2: restart from the step-5 checkpoint and continue
+    out_b = train_loop(ts, stream, TrainLoopConfig(
+        steps=10, ckpt_dir=str(tmp_path / "a"), ckpt_every=100,
+        resume=True))
+    # resumed from step 10 checkpoint -> no steps ran; force from 5:
+    import shutil
+    shutil.rmtree(tmp_path / "a" / "step_10")
+    out_c = train_loop(ts, stream, TrainLoopConfig(
+        steps=10, ckpt_dir=str(tmp_path / "a"), ckpt_every=100,
+        resume=True))
+    for la, lc in zip(out_a["losses"][5:], out_c["losses"]):
+        assert abs(la - lc) < 1e-4, (la, lc)
+
+
+def test_grad_accumulation_equivalence():
+    """k-microbatch accumulation == single big batch (same grads step)."""
+    cfg = tiny_cfg()
+    mesh = mesh_dm()
+    ts1 = build_train_step(cfg, mesh, opt_cfg=AdamWConfig(lr=1e-3),
+                           grad_accum=1, donate=False)
+    ts4 = build_train_step(cfg, mesh, opt_cfg=AdamWConfig(lr=1e-3),
+                           grad_accum=4, donate=False)
+    stream = stream_for(cfg)
+    batch = jax.tree.map(jnp.asarray, stream.batch(0))
+    p0, o0 = ts1.init_fn(jax.random.PRNGKey(0))
+    p1, _, m1 = ts1.step_fn(p0, o0, batch)
+    p0b, o0b = ts4.init_fn(jax.random.PRNGKey(0))
+    p4, _, m4 = ts4.step_fn(p0b, o0b, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 5e-3
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        diff = float(jnp.abs(a.astype(jnp.float32)
+                             - b.astype(jnp.float32)).max())
+        assert diff < 5e-3, diff
+
+
+def test_lpf_pod_sync_mode(mesh_pdm):
+    """LPF cross-pod gradient sync: runs, loss finite, params identical
+    across pods (replicated out-spec enforces it structurally)."""
+    cfg = tiny_cfg()
+    ts = build_train_step(cfg, mesh_pdm, opt_cfg=AdamWConfig(lr=1e-3),
+                          grad_sync="lpf")
+    stream = stream_for(cfg)
+    params, opt = ts.init_fn(jax.random.PRNGKey(0))
+    batch = jax.tree.map(jnp.asarray, stream.batch(0))
+    params, opt, metrics = ts.step_fn(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert ts.ledger.records, "LPF mode must record superstep costs"
+    assert ts.ledger.records[0].method.startswith("ring")
+
+
+def test_local_sgd_stale_sync(mesh_pdm):
+    """sync_every=k: inner steps skip the pod sync (stale), outer steps
+    run it — loss still decreases."""
+    cfg = tiny_cfg()
+    ts_sync = build_train_step(cfg, mesh_pdm, opt_cfg=AdamWConfig(lr=3e-3),
+                               grad_sync="lpf")
+    ts_local = build_train_step(cfg, mesh_pdm, opt_cfg=AdamWConfig(lr=3e-3),
+                                grad_sync="gspmd")
+    stream = stream_for(cfg)
+    out = train_loop(ts_sync, stream,
+                     TrainLoopConfig(steps=16, sync_every=4),
+                     step_fn_nosync=ts_local.step_fn)
+    assert np.isfinite(out["final_loss"])
+    assert out["final_loss"] < np.mean(out["losses"][:3])
+
+
+def test_serve_step_distributed(mesh_pdm):
+    cfg = tiny_cfg()
+    ss = build_serve_step(cfg, mesh_pdm, global_batch=4, cache_len=16)
+    from repro.models import init_caches, init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.device_put(params, ss.param_sharding)
+    caches = jax.device_put(init_caches(cfg, 4, 16), ss.cache_sharding)
+    tok = jnp.zeros((4,), jnp.int32)
+    for pos in range(3):
+        tok, caches = ss.step_fn(params, caches, tok, jnp.int32(pos))
+    assert tok.shape == (4,)
+    assert int(tok.max()) < cfg.vocab
