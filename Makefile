@@ -1,0 +1,13 @@
+.PHONY: test test-fast test-slow
+
+# tier-1: the canonical verification command
+test:
+	scripts/test.sh tier1
+
+# pure planner/unit tests — no XLA compile, runs in seconds
+test-fast:
+	scripts/test.sh fast
+
+# XLA-compiling SPMD tests
+test-slow:
+	scripts/test.sh slow

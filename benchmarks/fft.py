@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.algorithms import bsp_fft, fft_flops, fft_h_bytes
 from repro.core import probe, CPU_HOST
+from repro.core import compat
 
 
 def _time(fn, x, reps=5):
@@ -29,8 +30,7 @@ def _time(fn, x, reps=5):
 
 
 def main(csv=True, max_log2=18):
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("x",))
     rows = []
     rng = np.random.default_rng(0)
     for k in range(10, max_log2 + 1, 2):

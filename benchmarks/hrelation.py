@@ -20,6 +20,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import bsp, core as lpf
+from repro.core import compat
 
 
 def _time(fn, *args, reps=5):
@@ -71,8 +72,7 @@ def measure_constants(mesh, n_max_bytes=1 << 22):
 def main(csv=True):
     rows = []
     for p in (4, 8):
-        mesh = jax.make_mesh((p,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((p,), ("x",))
         m = measure_constants(mesh)
         rows.append(("hrelation_cpu", p, m["g_s_per_byte"], m["l_s"],
                      m["g_norm"], m["l_words"]))

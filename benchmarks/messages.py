@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import core as lpf
 from repro.core import SyncAttributes
+from repro.core import compat
 
 
 def _roundrobin(mesh, n_msgs, w, method):
@@ -59,8 +60,7 @@ def _roundrobin(mesh, n_msgs, w, method):
 
 
 def main(csv=True):
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("x",))
     rows = []
     for method in ("direct", "bruck"):
         for n_msgs in (1, 2, 4, 7):

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.algorithms import (dataflow_pagerank, lpf_pagerank,
                               partition_graph, rmat_graph)
+from repro.core import compat
 
 
 def _time(fn, reps=3):
@@ -29,8 +30,7 @@ def _time(fn, reps=3):
 
 
 def main(csv=True, sizes=((1 << 12, 6), (1 << 14, 6))):
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("x",))
     rows = []
     for n, avg_deg in sizes:
         edges = rmat_graph(n, n * avg_deg, seed=1)

@@ -17,14 +17,14 @@ import numpy as np
 
 from repro.algorithms import bsp_fft, fft_h_bytes
 from repro.core import probe
+from repro.core import compat
 
 N = 1 << 14
 CUTOFF = 200
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("x",))
     rng = np.random.default_rng(0)
     t = np.arange(N) / N
     clean = (np.sin(2 * np.pi * 50 * t) + 0.5 * np.sin(2 * np.pi * 120 * t))

@@ -20,13 +20,13 @@ from repro import core as lpf
 from repro.algorithms import (partition_graph, reference_pagerank,
                               rmat_graph)
 from repro.algorithms.pagerank import pagerank_spmd
+from repro.core import compat
 
 N, EDGES, PROCS = 256, 1500, 8
 
 
 def main():
-    mesh = jax.make_mesh((PROCS,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((PROCS,), ("x",))
     edges = rmat_graph(N, EDGES, seed=42)
     g = partition_graph(edges, N, PROCS)
     shard = {
@@ -46,7 +46,7 @@ def main():
         r, iters, res = lpf.hook(("x",), spmd, args)   # <-- lpf_hook
         return r, iters[None], local_nnz[None]
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         host_analytics, mesh=mesh,
         in_specs=({k: P("x") for k in shard},),
         out_specs=(P("x"), P(), P("x")), check_vma=False))

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import core as lpf
+from repro.core import compat
 
 OK, ILLEGAL_INPUT = 0, 1
 
@@ -57,8 +58,7 @@ def spmd(ctx, s, p, args):
 def main():
     m = int(sys.argv[1]) if len(sys.argv) > 1 else 1024
     n = int(sys.argv[2]) if len(sys.argv) > 2 else 512
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("x",))
     args = {"mdim": jnp.asarray([m, n], jnp.int32)}
     (err, rows), ledger = lpf.exec_(
         mesh, spmd, args, out_specs=(P(), P("x")), return_ledger=True)

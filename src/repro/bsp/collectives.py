@@ -23,6 +23,14 @@ int8 at a bounded precision cost; combine with error feedback in
 All functions take and return plain arrays and run inside any SPMD region
 via :func:`repro.core.hook` — this is the interoperability story: the same
 collective code serves the FFT, PageRank, and the training framework.
+
+Although every call registers fresh slots, the superstep planner's cache
+keys on the *shape* of the h-relation (slot ids canonically renamed), so
+a collective invoked repeatedly — per layer, per FFT stage, per training
+step trace — plans its exchange pattern once and replays the cached
+:class:`repro.core.SuperstepPlan` thereafter.  Each ``ctx.sync`` returns
+the superstep's :class:`repro.core.SuperstepCost` for callers that want
+to thread costs upward without reading the ledger back.
 """
 
 from __future__ import annotations

@@ -27,6 +27,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import LPFContext, LPF_SYNC_DEFAULT, SyncAttributes, hook
+from repro.core import compat
 from . import collectives
 
 __all__ = ["build_cross_pod_sync", "lpf_allreduce"]
@@ -53,8 +54,8 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
         return lambda grads: grads
 
     def sync(grads):
-        leaves, treedef = jax.tree.flatten(grads)
-        specs = jax.tree.flatten(grad_specs)[0]
+        leaves, treedef = compat.tree_flatten(grads)
+        specs = compat.tree_flatten(grad_specs)[0]
 
         def body(*local_leaves):
             def spmd(ctx, s, p, leaves_in):
@@ -76,9 +77,9 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
 
             return hook((pod_axis,), spmd, tuple(local_leaves))
 
-        out = jax.shard_map(body, mesh=mesh, in_specs=tuple(specs),
-                            out_specs=tuple(specs),
-                            check_vma=False)(*leaves)
-        return jax.tree.unflatten(treedef, list(out))
+        out = compat.shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                               out_specs=tuple(specs),
+                               check_vma=False)(*leaves)
+        return compat.tree_unflatten(treedef, list(out))
 
     return sync

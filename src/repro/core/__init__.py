@@ -28,7 +28,10 @@ from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
 from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
                       LPFMachine, probe)
 from .memslot import Slot, SlotRegistry
-from .sync import Msg
+from .sync import (Msg, PlanCache, RoundPlan, SuperstepPlan,
+                   execute_plan, global_plan_cache, plan_cost, plan_sync,
+                   plan_signature)
+from . import compat
 
 __all__ = [
     "LPFContext", "exec_", "hook", "rehook",
@@ -39,5 +42,8 @@ __all__ = [
     "HardwareModel", "LinkModel", "LPFMachine", "probe",
     "TPU_V5E", "TPU_V5P", "CPU_HOST",
     "Slot", "SlotRegistry", "Msg",
+    "PlanCache", "RoundPlan", "SuperstepPlan",
+    "plan_sync", "plan_signature", "plan_cost", "execute_plan",
+    "global_plan_cache", "compat",
     "CollectiveStats", "RooflineTerms", "parse_collectives", "roofline_terms",
 ]

@@ -1,0 +1,138 @@
+"""JAX version-compatibility shims.
+
+The library targets every JAX from 0.4.35 (the oldest with
+``jax.make_mesh``) through 0.5+/0.6+.  A handful of symbols moved or
+changed signature across that range; every use of them in this repo MUST
+go through this module so there is exactly one place that knows the
+version story:
+
+* ``shard_map`` — top-level ``jax.shard_map`` exists only on 0.6+; on
+  0.4.x it lives in ``jax.experimental.shard_map`` and spells the
+  replication check ``check_rep`` (new: ``check_vma``) and the partial
+  manualness set ``auto`` (new: ``axis_names``, the complement).
+* ``make_mesh`` — the ``axis_types`` kwarg (and ``jax.sharding.AxisType``
+  itself) only exists on 0.5+; older meshes are implicitly "auto".
+* ``tree_map`` & friends — ``jax.tree`` appeared in 0.4.25, before the
+  oldest release this repo supports, so these aliases exist only as a
+  convenience / insurance for even older jaxes; unlike ``shard_map``
+  and the mesh helpers above, calling ``jax.tree.*`` directly elsewhere
+  in the tree is fine.
+
+Nothing here imports anything heavier than ``jax`` itself, and all the
+probes are feature checks (``hasattr``), never version-string parses.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Set
+
+import jax
+
+__all__ = [
+    "HAS_AXIS_TYPE", "axis_types_auto", "make_mesh", "set_mesh",
+    "shard_map", "tree_map", "tree_flatten", "tree_unflatten",
+    "tree_leaves", "tree_structure",
+]
+
+# -- axis types ------------------------------------------------------------
+
+#: True when this JAX has ``jax.sharding.AxisType`` (0.5+).
+HAS_AXIS_TYPE: bool = hasattr(jax.sharding, "AxisType")
+
+
+def axis_types_auto(n: int):
+    """``(AxisType.Auto,) * n`` on JAX 0.5+, else ``None`` (old meshes are
+    implicitly auto; ``Mesh``/``make_mesh`` take no such argument)."""
+    if HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+# -- mesh construction -----------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with every axis explicitly ``Auto`` where the
+    concept exists, and plain construction where it does not."""
+    kwargs = {"devices": devices} if devices is not None else {}
+    types = axis_types_auto(len(tuple(axis_names)))
+    if types is not None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=types, **kwargs)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on 0.6+;
+    older ``Mesh`` objects are themselves context managers."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+# -- shard_map -------------------------------------------------------------
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = False,
+              axis_names: Optional[Set[str]] = None) -> Callable:
+    """Uniform ``shard_map`` over the old and new APIs.
+
+    ``axis_names`` follows the NEW convention: the set of mesh axes the
+    region is manual over (``None`` = all of them).  On 0.4.x this is
+    translated to the old ``auto=`` complement set, and ``check_vma``
+    becomes ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        # Partial-manual lowering is unreliable on 0.4.x XLA (PartitionId
+        # is UNIMPLEMENTED under SPMD partitioning; sharding propagation
+        # CHECK-fails on IsManualSubgroup).  When no in/out spec touches
+        # an auto axis the region is semantically identical to a fully
+        # manual one — every device along the auto axes holds replicated
+        # data and runs the same program — so fall back to full manual.
+        if auto and not _specs_touch_axes((in_specs, out_specs), auto):
+            auto = frozenset()
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kwargs)
+
+
+def _specs_touch_axes(specs, axes: frozenset) -> bool:
+    """True if any PartitionSpec leaf in ``specs`` names one of ``axes``."""
+    P = jax.sharding.PartitionSpec
+    hit = False
+    for leaf in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        if not isinstance(leaf, P):
+            continue
+        for entry in leaf:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if any(n in axes for n in names if n is not None):
+                hit = True
+    return hit
+
+
+# -- pytree helpers --------------------------------------------------------
+
+if hasattr(jax, "tree") and hasattr(jax.tree, "map"):
+    tree_map = jax.tree.map
+    tree_flatten = jax.tree.flatten
+    tree_unflatten = jax.tree.unflatten
+    tree_leaves = jax.tree.leaves
+    tree_structure = jax.tree.structure
+else:  # pragma: no cover - ancient JAX
+    tree_map = jax.tree_util.tree_map
+    tree_flatten = jax.tree_util.tree_flatten
+    tree_unflatten = jax.tree_util.tree_unflatten
+    tree_leaves = jax.tree_util.tree_leaves
+    tree_structure = jax.tree_util.tree_structure

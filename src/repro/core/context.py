@@ -26,12 +26,13 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from .attrs import LPF_SYNC_DEFAULT, SyncAttributes
-from .cost import CostLedger
+from .cost import CostLedger, SuperstepCost
 from .errors import LPFCapacityError, LPFFatalError
 from .machine import LPFMachine, HardwareModel, TPU_V5E, probe as _probe
 from .memslot import Slot, SlotRegistry
-from .sync import Msg, execute_sync
+from .sync import Msg, PlanCache, execute_plan, global_plan_cache
 
 __all__ = ["LPFContext", "exec_", "hook", "rehook", "LPF_ROOT_AXES"]
 
@@ -55,6 +56,7 @@ class LPFContext:
 
     def __init__(self, axes: Sequence[str] = LPF_ROOT_AXES, *,
                  hardware: HardwareModel = TPU_V5E,
+                 plan_cache: Optional[PlanCache] = None,
                  _parent: Optional["LPFContext"] = None):
         self.axes: Tuple[str, ...] = tuple(axes)
         if self.axes:
@@ -66,6 +68,10 @@ class LPFContext:
             self.p = 1
             self.pid = jnp.zeros((), jnp.int32)
         self.hardware = hardware
+        #: memoised superstep plans; shared process-wide by default so
+        #: repeated h-relations plan once across contexts and traces.
+        self.plan_cache = plan_cache if plan_cache is not None \
+            else global_plan_cache()
         self.registry = SlotRegistry(capacity=0)
         self.ledger = CostLedger()
         self._queue: List[Msg] = []
@@ -174,12 +180,19 @@ class LPFContext:
     # the fence: lpf_sync
     # ------------------------------------------------------------------
     def sync(self, attrs: SyncAttributes = LPF_SYNC_DEFAULT,
-             label: str = "") -> None:
+             label: str = "") -> SuperstepCost:
+        """Plan (memoised), lower, and account one superstep; returns its
+        ledger entry so callers can thread costs through without reading
+        the ledger back."""
         label = label or f"superstep[{self.ledger.supersteps}]"
-        cost = execute_sync(self.registry, self._queue, self.p, self.axes,
-                            self.pid, attrs, label, scratch=self._scratch)
+        plan = self.plan_cache.get_or_plan(self._queue, self.p, attrs,
+                                           self._scratch)
+        cost = execute_plan(plan, self.registry, self._queue, self.p,
+                            self.axes, self.pid, attrs, label,
+                            scratch=self._scratch)
         self.ledger.add(cost)
         self._queue = []
+        return cost
 
     # ------------------------------------------------------------------
     # introspection: lpf_probe
@@ -222,11 +235,17 @@ class _Args:
 
 def hook(axes: Sequence[str], spmd: Callable, args: Any = None, *,
          hardware: HardwareModel = TPU_V5E,
+         plan_cache: Optional[PlanCache] = None,
          parent: Optional[LPFContext] = None) -> Any:
     """``lpf_hook``: run an LPF SPMD function inside the *current* parallel
     environment (any traced program already under a mesh).  Returns the
-    function's output.  O(1) setup — no processes are spawned."""
-    ctx = LPFContext(axes, hardware=hardware, _parent=parent)
+    function's output.  O(1) setup — no processes are spawned.  The child
+    context inherits the parent's plan cache (or an explicit one) so
+    isolated caches stay isolated across hooked sub-programs."""
+    if plan_cache is None and parent is not None:
+        plan_cache = parent.plan_cache
+    ctx = LPFContext(axes, hardware=hardware, plan_cache=plan_cache,
+                     _parent=parent)
     return spmd(ctx, ctx.pid, ctx.p, args)
 
 
@@ -269,9 +288,9 @@ def exec_(mesh: jax.sharding.Mesh, spmd: Callable, args: Any = None, *,
         return spmd(ctx, ctx.pid, ctx.p, a)
 
     if in_specs is None:
-        in_specs = jax.tree.map(lambda _: P(), args)
-    fn = jax.shard_map(wrapped, mesh=mesh, in_specs=(in_specs,),
-                       out_specs=out_specs, check_vma=False)
+        in_specs = compat.tree_map(lambda _: P(), args)
+    fn = compat.shard_map(wrapped, mesh=mesh, in_specs=(in_specs,),
+                          out_specs=out_specs, check_vma=False)
     if jit:
         fn = jax.jit(fn)
     out = fn(args)

@@ -92,8 +92,11 @@ class CollectiveStats:
 
 _COMP_HDR = re.compile(
     r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", re.M)
+# the while operand's printed tuple type may itself contain parentheses
+# (e.g. "while((s32[], f32[8,16]{1,0}) %tuple.3)"), so match non-greedily
+# up to the condition/body attributes rather than to the first ")"
 _WHILE_RE = re.compile(
-    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _S32_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
 

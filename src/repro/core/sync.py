@@ -3,11 +3,26 @@
 The paper implements ``lpf_sync`` in four phases: (1) barrier + meta-data
 exchange, (2) write-conflict resolution, (3) data exchange, (4) barrier.
 On TPU/XLA the communication pattern of a BSP superstep is static at trace
-time, so phases (1)-(2) run *in the compiler*: we analyse the staged
-message table, resolve write conflicts by deterministic arbitration
-(ascending source PID; the last writer — highest PID — wins, a refinement
-of the paper's arbitrary-order CRCW), and lower phase (3) to a minimal
-schedule of XLA collectives.  Phase (4) is implicit in XLA's dataflow.
+time, so phases (1)-(2) run *in the compiler*.  Following pMR and the
+plan-once/execute-many design of FFTW-style communication layers, the
+compiler is split into three stages:
+
+* **plan** — :func:`plan_sync` analyses the staged message table, resolves
+  write conflicts by deterministic arbitration (ascending source PID; the
+  last writer — highest PID — wins, a refinement of the paper's
+  arbitrary-order CRCW), classifies fast paths, edge-colours the message
+  multigraph, and predicts the superstep's :class:`SuperstepCost`.  The
+  result is a :class:`SuperstepPlan` — a pure-Python IR with **no JAX
+  ops**, so planning is unit-testable in microseconds and reusable across
+  traces.
+* **cache** — :class:`PlanCache` memoises plans under a canonical
+  signature of ``(p, attributes, message table)`` with slot ids renamed to
+  first-occurrence indices, so the per-layer gradient syncs and per-stage
+  FFT supersteps that repeat the same h-relation (through freshly
+  registered slots) hit the cache instead of re-colouring.
+* **execute** — :func:`execute_plan` lowers a :class:`SuperstepPlan` to a
+  minimal schedule of XLA collectives and appends the (already predicted)
+  cost to the ledger.  Phase (4) is implicit in XLA's dataflow.
 
 Three execution methods mirror the paper's Table 1:
 
@@ -23,16 +38,17 @@ Three execution methods mirror the paper's Table 1:
   sync of a near-balanced relation.
 
 Every sync appends a :class:`SuperstepCost` to the context ledger so model
-compliance can be audited against the compiled HLO.
+compliance can be audited against the compiled HLO; the executed ledger
+entry is by construction identical to the plan's prediction.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -42,7 +58,11 @@ from .cost import SuperstepCost
 from .errors import LPFFatalError
 from .memslot import Slot, SlotRegistry
 
-__all__ = ["Msg", "execute_sync", "plan_cost"]
+__all__ = [
+    "Msg", "RoundPlan", "SuperstepPlan", "PlanCache", "CacheStats",
+    "plan_sync", "plan_signature", "execute_plan", "execute_sync",
+    "plan_cost", "global_plan_cache",
+]
 
 AxisNames = Tuple[str, ...]
 
@@ -88,19 +108,61 @@ class Msg:
                         f"register_global ({self.origin} in {self})")
 
 
-# --------------------------------------------------------------------------
-# Phase 1-2: trace-time planning
-# --------------------------------------------------------------------------
+def _itemsize(dtype) -> int:
+    return np.dtype(dtype).itemsize
 
-@dataclasses.dataclass
-class Round:
-    """One partial permutation: <=1 send and <=1 receive per process."""
 
-    msgs: List[Msg]
-    size: int = 0  # padded payload (elements), filled by finalise
+def _is_floating(dtype) -> bool:
+    return np.issubdtype(np.dtype(dtype), np.floating)
 
-    def finalise(self) -> None:
-        self.size = max((m.size for m in self.msgs), default=0)
+
+# ==========================================================================
+# Stage 1: PLAN — pure Python, no JAX ops
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One partial permutation of the ``direct`` method.
+
+    ``msg_idx`` indexes into the message list the plan was built from (the
+    superstep queue, or a Valiant phase list); per-PID offset tables are
+    rebuilt from those messages at lowering time — only the *decisions*
+    (membership, order, padding, fast-path) are cached."""
+
+    msg_idx: Tuple[int, ...]
+    size: int                        # padded payload (elements)
+    static_src_off: Optional[int]    # uniform-round fast path, else None
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepPlan:
+    """The planned superstep: everything ``lpf_sync`` decides at trace
+    time, decoupled from slot identities and traced values.
+
+    A plan built for one message table is valid for any table with the
+    same :func:`plan_signature` — same ``p``, attributes, and per-message
+    ``(src, dst, slot shape/dtype/kind pattern, offsets, size)`` with slot
+    ids renamed by first occurrence."""
+
+    method: str        # noop | seq | direct | bruck | valiant | fused | fused_ag
+    p: int
+    n_msgs: int
+    cost: SuperstepCost                                   # label == ""
+    rounds: Tuple[RoundPlan, ...] = ()                    # direct
+    seq_order: Tuple[int, ...] = ()                       # p == 1 memcpys
+    fused_w: int = 0                                      # fused / fused_ag
+    ag_src_off: Tuple[int, ...] = ()                      # fused_ag, per pid
+    ag_exclude_self: bool = False
+    bruck_w: int = 0
+    bruck_steps: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()  # (step, rows)
+    valiant_order: Tuple[int, ...] = ()                   # sorted msg indices
+    valiant_via: Tuple[int, ...] = ()                     # intermediate pid
+    valiant_off: Tuple[int, ...] = ()                     # scratch offset
+    valiant_phase1: Tuple[RoundPlan, ...] = ()
+    valiant_phase2: Tuple[RoundPlan, ...] = ()
+
+    def cost_with_label(self, label: str) -> SuperstepCost:
+        return dataclasses.replace(self.cost, label=label)
 
 
 def _conflicts(a: Msg, b: Msg) -> bool:
@@ -109,49 +171,49 @@ def _conflicts(a: Msg, b: Msg) -> bool:
             and b.dst_off < a.dst_off + a.size)
 
 
-def _colour_rounds(msgs: Sequence[Msg], no_conflict: bool) -> List[Round]:
+def _colour_rounds(idxs: Sequence[int], msgs: Sequence[Msg],
+                   no_conflict: bool) -> List[List[int]]:
     """Greedy edge colouring preserving CRCW arbitration order.
 
     Messages are placed in ascending (src, dst, dst_off) order; a message
     that overlaps an earlier message's destination region must land in a
     strictly later round so that the higher-PID write is applied last.
+    Returns rounds as lists of indices into ``msgs``.
     """
-    order = sorted(msgs, key=lambda m: (m.src, m.dst, m.dst_off))
-    rounds: List[Round] = []
+    order = sorted(idxs, key=lambda i: (msgs[i].src, msgs[i].dst,
+                                        msgs[i].dst_off))
+    rounds: List[List[int]] = []
     send_busy: List[set] = []
     recv_busy: List[set] = []
-    placed: List[Tuple[Msg, int]] = []
-    for m in order:
+    placed: List[Tuple[int, int]] = []
+    for i in order:
+        m = msgs[i]
         floor = 0
         if not no_conflict:
             for prev, r in placed:
-                if _conflicts(prev, m):
+                if _conflicts(msgs[prev], m):
                     floor = max(floor, r + 1)
         r = floor
         while True:
             while r >= len(rounds):
-                rounds.append(Round(msgs=[]))
+                rounds.append([])
                 send_busy.append(set())
                 recv_busy.append(set())
             if m.src not in send_busy[r] and m.dst not in recv_busy[r]:
-                rounds[r].msgs.append(m)
+                rounds[r].append(i)
                 send_busy[r].add(m.src)
                 recv_busy[r].add(m.dst)
-                placed.append((m, r))
+                placed.append((i, r))
                 break
             r += 1
-    for rd in rounds:
-        rd.finalise()
     return rounds
 
 
-def _is_uniform_round(msgs: Sequence[Msg], p: int) -> bool:
+def _is_uniform(idxs: Sequence[int], msgs: Sequence[Msg]) -> bool:
     """True if all messages share offsets and size (static-slice fast path)."""
-    if not msgs:
-        return False
-    m0 = msgs[0]
-    return all(m.src_off == m0.src_off and m.dst_off == m0.dst_off
-               and m.size == m0.size for m in msgs)
+    m0 = msgs[idxs[0]]
+    return all(msgs[i].src_off == m0.src_off and msgs[i].dst_off == m0.dst_off
+               and msgs[i].size == m0.size for i in idxs)
 
 
 def _detect_total_exchange(msgs: Sequence[Msg], p: int
@@ -216,7 +278,7 @@ def plan_cost(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
     recv = np.zeros(p, dtype=np.int64)
     for m in msgs:
         if m.src != m.dst:
-            nbytes = m.size * jnp.dtype(m.src_slot.dtype).itemsize
+            nbytes = m.size * _itemsize(m.src_slot.dtype)
             sent[m.src] += nbytes
             recv[m.dst] += nbytes
     h_bytes = int(max(np.max(sent, initial=0), np.max(recv, initial=0)))
@@ -230,9 +292,327 @@ def plan_cost(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
                          n_msgs=len(msgs), method=method)
 
 
-# --------------------------------------------------------------------------
-# Phase 3: data exchange primitives (traced)
-# --------------------------------------------------------------------------
+def _round_compressed(rd: RoundPlan, msgs: Sequence[Msg],
+                      attrs: SyncAttributes) -> bool:
+    """Whether int8 wire compression applies to this round's payload."""
+    return (attrs.compress is not None
+            and _is_floating(msgs[rd.msg_idx[0]].src_slot.dtype))
+
+
+def _plan_direct(msgs: Sequence[Msg], attrs: SyncAttributes,
+                 wire_sent: Dict[int, int], wire_recv: Dict[int, int]
+                 ) -> Tuple[Tuple[RoundPlan, ...], int]:
+    """Group by slot pair, colour each group, and account wire traffic.
+
+    Groups are ordered by first occurrence in the message list (never by
+    raw slot id) so that equivalent tables — same pattern through freshly
+    registered slots — produce identical plans and can share one cache
+    entry."""
+    groups: "collections.OrderedDict[Tuple[int, int], List[int]]" = \
+        collections.OrderedDict()
+    for i, m in enumerate(msgs):
+        groups.setdefault((m.src_slot.sid, m.dst_slot.sid), []).append(i)
+    rounds: List[RoundPlan] = []
+    for idxs in groups.values():
+        for round_idxs in _colour_rounds(idxs, msgs, attrs.no_conflict):
+            size = max((msgs[i].size for i in round_idxs), default=0)
+            static = msgs[round_idxs[0]].src_off \
+                if round_idxs and _is_uniform(round_idxs, msgs) else None
+            rounds.append(RoundPlan(tuple(round_idxs), size, static))
+
+    n_collectives = 0
+    for rd in rounds:
+        remote = [(msgs[i].src, msgs[i].dst) for i in rd.msg_idx
+                  if msgs[i].src != msgs[i].dst]
+        if not remote:
+            continue
+        compressed = _round_compressed(rd, msgs, attrs)
+        itemsize = _itemsize(msgs[rd.msg_idx[0]].dst_slot.dtype)
+        wire_elem = (rd.size // 4 + 1) if compressed else rd.size
+        n_collectives += 2 if compressed else 1
+        for s, d in remote:
+            wire_sent[s] = wire_sent.get(s, 0) + wire_elem * itemsize
+            wire_recv[d] = wire_recv.get(d, 0) + wire_elem * itemsize
+    return tuple(rounds), max(n_collectives, 1)
+
+
+def _plan_bruck(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
+                wire_sent: Dict[int, int], wire_recv: Dict[int, int]
+                ) -> Tuple[int, Tuple[Tuple[int, Tuple[int, ...]], ...], int]:
+    pairs = set()
+    for m in msgs:
+        key = (m.src, m.dst)
+        if key in pairs:
+            raise LPFFatalError("bruck method requires unique (src,dst) pairs; "
+                                "use method='direct' for multigraphs")
+        pairs.add(key)
+    m0 = msgs[0]
+    for m in msgs:
+        if (m.src_slot.sid != m0.src_slot.sid
+                or m.dst_slot.sid != m0.dst_slot.sid):
+            raise LPFFatalError("bruck method requires a single slot pair")
+    w = max(m.size for m in msgs)
+    itemsize = _itemsize(m0.src_slot.dtype)
+    nrounds = max(1, math.ceil(math.log2(p))) if p > 1 else 0
+    steps: List[Tuple[int, Tuple[int, ...]]] = []
+    n_collectives = 0
+    for k in range(nrounds):
+        step = 1 << k
+        rows = tuple(r for r in range(1, p) if r & step)
+        if not rows:
+            continue
+        steps.append((step, rows))
+        n_collectives += 1
+        vol = len(rows) * w * itemsize
+        for pid in range(p):
+            wire_sent[pid] = wire_sent.get(pid, 0) + vol
+            wire_recv[pid] = wire_recv.get(pid, 0) + vol
+    return w, tuple(steps), max(n_collectives, 1)
+
+
+def _plan_valiant_split(msgs: Sequence[Msg], p: int, seed: int,
+                        scratch: Slot
+                        ) -> Tuple[List[int], List[int], List[int]]:
+    """Assign each message a seeded-hash intermediate and scratch offset."""
+    cursor = np.zeros(p, dtype=np.int64)
+    order = sorted(range(len(msgs)),
+                   key=lambda i: (msgs[i].src, msgs[i].dst, msgs[i].dst_off))
+    via: List[int] = []
+    offs: List[int] = []
+    for rank, i in enumerate(order):
+        m = msgs[i]
+        t = (m.src * 2654435761 + m.dst * 40503 + rank * 97 + seed) % p
+        off = int(cursor[t])
+        if off + m.size > scratch.size:
+            raise LPFFatalError(
+                "valiant scratch overflow; resize_message_queue with a "
+                "larger payload capacity")
+        cursor[t] += m.size
+        via.append(t)
+        offs.append(off)
+    return order, via, offs
+
+
+def _valiant_phase_msgs(msgs: Sequence[Msg], order: Sequence[int],
+                        via: Sequence[int], offs: Sequence[int],
+                        scratch: Slot) -> Tuple[List[Msg], List[Msg]]:
+    phase1 = [Msg(msgs[i].src, t, msgs[i].src_slot, msgs[i].src_off,
+                  scratch, off, msgs[i].size)
+              for i, t, off in zip(order, via, offs)]
+    phase2 = [Msg(t, msgs[i].dst, scratch, off,
+                  msgs[i].dst_slot, msgs[i].dst_off, msgs[i].size)
+              for i, t, off in zip(order, via, offs)]
+    return phase1, phase2
+
+
+def plan_sync(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
+              scratch: Optional[Slot] = None) -> SuperstepPlan:
+    """Phases (1)-(2): validate, arbitrate, classify, colour, and cost one
+    superstep.  Pure Python on static metadata — no JAX ops, no traced
+    values — so it can run (and be property-tested) without any mesh."""
+    msgs = list(msgs)
+    for m in msgs:
+        m.validate(p)
+    wire_sent: Dict[int, int] = {}
+    wire_recv: Dict[int, int] = {}
+
+    if not msgs or p == 0:
+        return SuperstepPlan(
+            method="noop", p=max(p, 1), n_msgs=len(msgs),
+            cost=plan_cost(msgs, max(p, 1), attrs, "", "noop", 0,
+                           wire_sent, wire_recv))
+
+    if p == 1:
+        # LPF_ROOT / sequential context: puts degenerate to memcpys.
+        order = tuple(sorted(range(len(msgs)),
+                             key=lambda i: (msgs[i].src, msgs[i].dst,
+                                            msgs[i].dst_off)))
+        return SuperstepPlan(
+            method="seq", p=p, n_msgs=len(msgs), seq_order=order,
+            cost=plan_cost(msgs, p, attrs, "", "noop", 0,
+                           wire_sent, wire_recv))
+
+    method = attrs.method
+    if method == "auto":
+        if _detect_total_exchange(msgs, p) is not None:
+            method = "fused"
+        elif _detect_allgather(msgs, p) is not None:
+            method = "fused_ag"
+        else:
+            # latency heuristic: many small messages per process -> bruck
+            per_src: Dict[int, int] = {}
+            for m in msgs:
+                per_src[m.src] = per_src.get(m.src, 0) + 1
+            max_deg = max(per_src.values())
+            uniq = len({(m.src, m.dst) for m in msgs}) == len(msgs)
+            one_pair = len({(m.src_slot.sid, m.dst_slot.sid)
+                            for m in msgs}) == 1
+            sizes = [m.size for m in msgs]
+            small = max(sizes) <= 4 * max(1, min(sizes))
+            if uniq and one_pair and small and max_deg > 4 * math.ceil(
+                    math.log2(p)):
+                method = "bruck"
+            else:
+                method = "direct"
+
+    if method == "fused_ag":
+        src_slot, dst_slot, w, src_off = _detect_allgather(msgs, p)
+        compressed = attrs.compress is not None and _is_floating(
+            src_slot.dtype)
+        itemsize = 1 if compressed else _itemsize(src_slot.dtype)
+        for pid in range(p):
+            wire_sent[pid] = (p - 1) * w * itemsize
+            wire_recv[pid] = (p - 1) * w * itemsize
+        return SuperstepPlan(
+            method="fused_ag", p=p, n_msgs=len(msgs), fused_w=w,
+            ag_src_off=tuple(int(o) for o in src_off),
+            ag_exclude_self=len(msgs) == p * (p - 1),
+            cost=plan_cost(msgs, p, attrs, "", "fused_ag", 1,
+                           wire_sent, wire_recv))
+
+    if method == "fused":
+        src_slot, dst_slot, w = _detect_total_exchange(msgs, p)
+        compressed = attrs.compress is not None and _is_floating(
+            src_slot.dtype)
+        itemsize = 1 if compressed else _itemsize(src_slot.dtype)
+        for pid in range(p):
+            wire_sent[pid] = (p - 1) * w * itemsize
+            wire_recv[pid] = (p - 1) * w * itemsize
+        return SuperstepPlan(
+            method="fused", p=p, n_msgs=len(msgs), fused_w=w,
+            cost=plan_cost(msgs, p, attrs, "", "fused", 1,
+                           wire_sent, wire_recv))
+
+    if method == "valiant":
+        if scratch is None:
+            raise LPFFatalError("valiant routing needs a scratch slot; the "
+                                "context provisions one via "
+                                "resize_message_queue(payload=...)")
+        order, via, offs = _plan_valiant_split(msgs, p, attrs.valiant_seed,
+                                               scratch)
+        ph1, ph2 = _valiant_phase_msgs(msgs, order, via, offs, scratch)
+        sub = attrs.replace(method="direct")
+        rounds1, r1 = _plan_direct(ph1, sub, wire_sent, wire_recv)
+        rounds2, r2 = _plan_direct(ph2, sub, wire_sent, wire_recv)
+        return SuperstepPlan(
+            method="valiant", p=p, n_msgs=len(msgs),
+            valiant_order=tuple(order), valiant_via=tuple(via),
+            valiant_off=tuple(offs),
+            valiant_phase1=rounds1, valiant_phase2=rounds2,
+            cost=plan_cost(msgs, p, attrs, "", "valiant", r1 + r2,
+                           wire_sent, wire_recv))
+
+    if method == "bruck":
+        w, steps, rounds = _plan_bruck(msgs, p, attrs, wire_sent, wire_recv)
+        return SuperstepPlan(
+            method="bruck", p=p, n_msgs=len(msgs), bruck_w=w,
+            bruck_steps=steps,
+            cost=plan_cost(msgs, p, attrs, "", "bruck", rounds,
+                           wire_sent, wire_recv))
+
+    rounds_plan, rounds = _plan_direct(msgs, attrs, wire_sent, wire_recv)
+    return SuperstepPlan(
+        method="direct", p=p, n_msgs=len(msgs), rounds=rounds_plan,
+        cost=plan_cost(msgs, p, attrs, "", "direct", rounds,
+                       wire_sent, wire_recv))
+
+
+# ==========================================================================
+# Stage 2: CACHE — canonical signatures and memoised plans
+# ==========================================================================
+
+def plan_signature(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
+                   scratch: Optional[Slot] = None) -> Hashable:
+    """A hashable key identifying every input :func:`plan_sync` reads.
+
+    Slot ids are renamed to first-occurrence indices and described by
+    ``(size, dtype, kind)``, so the same h-relation staged through freshly
+    registered slots (a collective called in a loop, a per-layer gradient
+    sync) maps to the same key.  Message *order* is part of the key: CRCW
+    arbitration is order-sensitive, so a permuted table is a different
+    plan."""
+    canon: Dict[int, int] = {}
+    slots: List[Tuple[int, str, str]] = []
+
+    def slot_key(slot: Slot) -> int:
+        idx = canon.get(slot.sid)
+        if idx is None:
+            idx = canon[slot.sid] = len(canon)
+            slots.append((slot.size, str(np.dtype(slot.dtype)), slot.kind))
+        return idx
+
+    table = tuple((m.src, m.dst, slot_key(m.src_slot), m.src_off,
+                   slot_key(m.dst_slot), m.dst_off, m.size, m.origin)
+                  for m in msgs)
+    if attrs.method == "valiant":
+        scratch_sig = (attrs.valiant_seed,
+                       None if scratch is None
+                       else (scratch.size, str(np.dtype(scratch.dtype))))
+    else:
+        scratch_sig = None
+    return (p, attrs.method, attrs.no_conflict, attrs.compress,
+            scratch_sig, tuple(slots), table)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def plans(self) -> int:
+        """Planning passes actually run (== misses)."""
+        return self.misses
+
+
+class PlanCache:
+    """LRU memo of :class:`SuperstepPlan` keyed by :func:`plan_signature`.
+
+    Planning is trace-time Python, so a 64-superstep FFT whose stages
+    repeat a handful of distinct relations re-plans each relation once and
+    replays the cached IR for the other supersteps."""
+
+    def __init__(self, maxsize: int = 1024):
+        self.maxsize = maxsize
+        self._plans: "collections.OrderedDict[Hashable, SuperstepPlan]" = \
+            collections.OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.stats = CacheStats()
+
+    def get_or_plan(self, msgs: Sequence[Msg], p: int,
+                    attrs: SyncAttributes,
+                    scratch: Optional[Slot] = None) -> SuperstepPlan:
+        key = plan_signature(msgs, p, attrs, scratch)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats.hits += 1
+            self._plans.move_to_end(key)
+            return plan
+        plan = plan_sync(msgs, p, attrs, scratch)
+        self.stats.misses += 1
+        self._plans[key] = plan
+        if len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)
+        return plan
+
+
+_GLOBAL_PLAN_CACHE = PlanCache()
+
+
+def global_plan_cache() -> PlanCache:
+    """The process-wide plan cache (shared across contexts and traces)."""
+    return _GLOBAL_PLAN_CACHE
+
+
+# ==========================================================================
+# Stage 3: EXECUTE — lowering a plan to XLA collectives (traced)
+# ==========================================================================
 
 def _gather_payload(val: jnp.ndarray, offs: np.ndarray, size: int,
                     myid: jnp.ndarray, static_off: Optional[int]) -> jnp.ndarray:
@@ -290,62 +670,41 @@ def _ppermute(x, axes: AxisNames, perm: List[Tuple[int, int]]):
     return lax.ppermute(x, axes if len(axes) > 1 else axes[0], perm)
 
 
-# --------------------------------------------------------------------------
-# Method: direct
-# --------------------------------------------------------------------------
+def _execute_direct(registry: SlotRegistry, msgs: Sequence[Msg],
+                    rounds: Sequence[RoundPlan], p: int, axes: AxisNames,
+                    myid, attrs: SyncAttributes) -> None:
+    """Lower planned ``direct`` rounds: one ``ppermute`` per round.
 
-def _execute_direct(registry: SlotRegistry, msgs: List[Msg], p: int,
-                    axes: AxisNames, myid, attrs: SyncAttributes,
-                    wire_sent: Dict[int, int], wire_recv: Dict[int, int]
-                    ) -> int:
-    """Direct method: rounds of partial permutations.  Returns #rounds.
-
-    Messages are grouped by (src_slot, dst_slot) pair — each round draws
-    from one source slot and writes one destination slot — and all
-    payloads are extracted from the *pre-sync* slot values before any
+    All payloads are extracted from the *pre-sync* slot values before any
     write is applied (LPF reads observe the pre-superstep state)."""
-    groups: Dict[Tuple[int, int], List[Msg]] = {}
-    for m in msgs:
-        groups.setdefault((m.src_slot.sid, m.dst_slot.sid), []).append(m)
-    rounds: List[Round] = []
-    for key in sorted(groups):
-        rounds.extend(_colour_rounds(groups[key], attrs.no_conflict))
-
     # ---- extraction (reads observe pre-sync values) ----
     extracted: List[jnp.ndarray] = []
     scales: List[Optional[jnp.ndarray]] = []
     for rd in rounds:
-        src_slot = rd.msgs[0].src_slot
+        src_slot = msgs[rd.msg_idx[0]].src_slot
         offs = np.zeros(p, dtype=np.int32)
-        for m in rd.msgs:
-            offs[m.src] = m.src_off
-        static_off = rd.msgs[0].src_off if _is_uniform_round(rd.msgs, p) else None
+        for i in rd.msg_idx:
+            offs[msgs[i].src] = msgs[i].src_off
         payload = _gather_payload(registry.value(src_slot), offs, rd.size,
-                                  myid, static_off)
+                                  myid, rd.static_src_off)
         payload, scale = _maybe_compress(payload, attrs)
         extracted.append(payload)
         scales.append(scale)
 
     # ---- exchange + ordered writes ----
-    n_collectives = 0
     for rd, payload, scale in zip(rounds, extracted, scales):
-        remote = [(m.src, m.dst) for m in rd.msgs if m.src != m.dst]
-        dst_slot = rd.msgs[0].dst_slot
-        itemsize = jnp.dtype(dst_slot.dtype).itemsize
-        wire_elem = (rd.size // 4 + 1) if scale is not None else rd.size
+        rd_msgs = [msgs[i] for i in rd.msg_idx]
+        remote = [(m.src, m.dst) for m in rd_msgs if m.src != m.dst]
+        dst_slot = rd_msgs[0].dst_slot
         if remote:
             arrived = _ppermute(payload, axes, remote)
             if scale is not None:
                 arrived_scale = _ppermute(scale, axes, remote)
-            n_collectives += 1 if scale is None else 2
-            for s, d in remote:
-                wire_sent[s] = wire_sent.get(s, 0) + wire_elem * itemsize
-                wire_recv[d] = wire_recv.get(d, 0) + wire_elem * itemsize
         else:
             arrived, arrived_scale = payload, scale
         # self-messages bypass the wire (a local memcpy, as in the paper's
         # shared-memory backend)
-        selfs = [(m.src, m.dst) for m in rd.msgs if m.src == m.dst]
+        selfs = [(m.src, m.dst) for m in rd_msgs if m.src == m.dst]
         if selfs and remote:
             self_mask = np.zeros(p, np.int8)
             for s, _ in selfs:
@@ -361,79 +720,49 @@ def _execute_direct(registry: SlotRegistry, msgs: List[Msg], p: int,
         offs = np.zeros(p, dtype=np.int32)
         sizes = np.zeros(p, dtype=np.int32)
         mask = np.zeros(p, dtype=np.int8)
-        for m in rd.msgs:
+        for m in rd_msgs:
             offs[m.dst] = m.dst_off
             sizes[m.dst] = m.size
             mask[m.dst] = 1
         registry.set_value(dst_slot, _scatter_payload(
             registry.value(dst_slot), arrived, offs, sizes, mask, myid))
-    return max(n_collectives, 1)
 
 
-# --------------------------------------------------------------------------
-# Method: bruck (relative-destination coordinates; static row sets)
-# --------------------------------------------------------------------------
-
-def _execute_bruck(registry: SlotRegistry, msgs: List[Msg], p: int,
-                   axes: AxisNames, myid, attrs: SyncAttributes,
-                   wire_sent: Dict[int, int], wire_recv: Dict[int, int]
-                   ) -> int:
-    """Bruck-style log-latency exchange.
+def _execute_bruck(registry: SlotRegistry, msgs: Sequence[Msg],
+                   plan: SuperstepPlan, p: int, axes: AxisNames,
+                   myid) -> None:
+    """Lower planned Bruck rounds.
 
     Row ``r`` of the working matrix holds the payload this process
     currently carries whose *original* relative distance (dst - origin
     mod p) is ``r``.  All blocks of equal original distance move through
-    identical hop sequences, so row sets per round are static.  Supports
-    at most one message per (src, dst) pair; sizes padded to the max.
-    """
-    pairs = {}
-    for m in msgs:
-        key = (m.src, m.dst)
-        if key in pairs:
-            raise LPFFatalError("bruck method requires unique (src,dst) pairs; "
-                                "use method='direct' for multigraphs")
-        pairs[key] = m
-    w = max(m.size for m in msgs)
+    identical hop sequences, so row sets per round are static."""
+    w = plan.bruck_w
     m0 = msgs[0]
     src_slot, dst_slot = m0.src_slot, m0.dst_slot
-    for m in msgs:
-        if m.src_slot.sid != src_slot.sid or m.dst_slot.sid != dst_slot.sid:
-            raise LPFFatalError("bruck method requires a single slot pair")
-    itemsize = jnp.dtype(src_slot.dtype).itemsize
 
     # tables[src, rel] -> offset/size/mask of the message src -> src+rel
     src_off = np.zeros((p, p), np.int32)
     dst_off = np.zeros((p, p), np.int32)
     sizes = np.zeros((p, p), np.int32)
     mask = np.zeros((p, p), np.int8)
-    for (s, d), m in pairs.items():
-        rel = (d - s) % p
-        src_off[s, rel] = m.src_off
-        dst_off[d, rel] = m.dst_off   # indexed by *receiver* pid
-        sizes[s, rel] = m.size
-        mask[s, rel] = 1
+    for m in msgs:
+        rel = (m.dst - m.src) % p
+        src_off[m.src, rel] = m.src_off
+        dst_off[m.dst, rel] = m.dst_off   # indexed by *receiver* pid
+        sizes[m.src, rel] = m.size
+        mask[m.src, rel] = 1
     val = registry.value(src_slot)
     my_off = jnp.asarray(src_off)[myid]                       # [p]
     idx = my_off[:, None] + jnp.arange(w)[None, :]            # [p, w]
     buf = jnp.take(val, idx.reshape(-1), mode="fill",
                    fill_value=0).reshape(p, w)
-    nrounds = max(1, math.ceil(math.log2(p))) if p > 1 else 0
 
-    n_collectives = 0
-    for k in range(nrounds):
-        step = 1 << k
-        rows = [r for r in range(1, p) if r & step]
-        if not rows:
-            continue
+    for step, rows in plan.bruck_steps:
         sub = buf[np.asarray(rows)]
         perm = [(i, (i + step) % p) for i in range(p)]
         sub = _ppermute(sub, axes, perm)
         buf = buf.at[np.asarray(rows)].set(sub)
-        n_collectives += 1
-        vol = len(rows) * w * itemsize
-        for pid in range(p):
-            wire_sent[pid] = wire_sent.get(pid, 0) + vol
-            wire_recv[pid] = wire_recv.get(pid, 0) + vol
 
     # delivery: row r arrived from origin (me - r) % p; write at the
     # receiver-side offset table entries.
@@ -444,102 +773,49 @@ def _execute_bruck(registry: SlotRegistry, msgs: List[Msg], p: int,
     my_len = my_sizes[origin, jnp.arange(p)]                  # [p]
     my_mask = jnp.asarray(mask)[origin, jnp.arange(p)]        # [p]
     # apply rows in ascending origin pid order for CRCW determinism
-    order = np.arange(p)
-    for r in order:
+    for r in range(p):
         keep = (jnp.arange(w) < my_len[r]) & (my_mask[r] > 0)
         tgt = my_dst_off[r] + jnp.arange(w)
         cur = out.at[tgt].get(mode="fill",
                               fill_value=0)
         out = out.at[tgt].set(jnp.where(keep, buf[r], cur), mode="drop")
     registry.set_value(dst_slot, out)
-    return max(n_collectives, 1)
 
 
-# --------------------------------------------------------------------------
-# Method: valiant two-phase randomised routing
-# --------------------------------------------------------------------------
+def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
+                 msgs: Sequence[Msg], p: int, axes: AxisNames, myid,
+                 attrs: SyncAttributes, label: str,
+                 scratch: Optional[Slot] = None) -> SuperstepCost:
+    """Phase (3): lower ``plan`` against the current slot values.
 
-def _valiant_split(msgs: List[Msg], p: int, seed: int, scratch: Slot
-                   ) -> Tuple[List[Msg], List[Msg]]:
-    """Split messages into two near-balanced phases via seeded hashing."""
-    cursor = np.zeros(p, dtype=np.int64)
-    phase1: List[Msg] = []
-    phase2: List[Msg] = []
-    for i, m in enumerate(sorted(msgs, key=lambda m: (m.src, m.dst, m.dst_off))):
-        t = (m.src * 2654435761 + m.dst * 40503 + i * 97 + seed) % p
-        off = int(cursor[t])
-        if off + m.size > scratch.size:
-            raise LPFFatalError(
-                "valiant scratch overflow; resize_message_queue with a "
-                "larger payload capacity")
-        cursor[t] += m.size
-        phase1.append(Msg(m.src, t, m.src_slot, m.src_off,
-                          scratch, off, m.size))
-        phase2.append(Msg(t, m.dst, scratch, off,
-                          m.dst_slot, m.dst_off, m.size))
-    return phase1, phase2
+    ``msgs`` must be the table the plan was built from, or any table with
+    the same :func:`plan_signature` (the cache guarantees this).  Mutates
+    registry values; returns the superstep's ledger entry — identical to
+    the plan's predicted cost, with the label attached."""
+    if plan.method == "noop":
+        return plan.cost_with_label(label)
 
-
-# --------------------------------------------------------------------------
-# entry point
-# --------------------------------------------------------------------------
-
-def execute_sync(registry: SlotRegistry, queue: List[Msg], p: int,
-                 axes: AxisNames, myid, attrs: SyncAttributes,
-                 label: str, scratch: Optional[Slot] = None) -> SuperstepCost:
-    """Run one superstep; mutates registry values; returns its cost record."""
-    msgs = list(queue)
-    for m in msgs:
-        m.validate(p)
-    wire_sent: Dict[int, int] = {}
-    wire_recv: Dict[int, int] = {}
-
-    if not msgs or p == 0:
-        return plan_cost(msgs, max(p, 1), attrs, label, "noop", 0,
-                         wire_sent, wire_recv)
-
-    if p == 1:
-        # LPF_ROOT / sequential context: puts degenerate to memcpys.
-        for m in sorted(msgs, key=lambda m: (m.src, m.dst, m.dst_off)):
+    if plan.method == "seq":
+        for i in plan.seq_order:
+            m = msgs[i]
             src = registry.value(m.src_slot)
             dst = registry.value(m.dst_slot)
             chunk = lax.dynamic_slice(src, (m.src_off,), (m.size,))
             registry.set_value(m.dst_slot,
                                lax.dynamic_update_slice(dst, chunk,
                                                         (m.dst_off,)))
-        return plan_cost(msgs, p, attrs, label, "noop", 0, wire_sent, wire_recv)
+        return plan.cost_with_label(label)
 
-    method = attrs.method
-    if method == "auto":
-        fused = _detect_total_exchange(msgs, p)
-        gathered = _detect_allgather(msgs, p)
-        if fused is not None:
-            method = "fused"
-        elif gathered is not None:
-            method = "fused_ag"
-        else:
-            # latency heuristic: many small messages per process -> bruck
-            per_src: Dict[int, int] = {}
-            for m in msgs:
-                per_src[m.src] = per_src.get(m.src, 0) + 1
-            max_deg = max(per_src.values())
-            uniq = len({(m.src, m.dst) for m in msgs}) == len(msgs)
-            one_pair = len({(m.src_slot.sid, m.dst_slot.sid) for m in msgs}) == 1
-            sizes = [m.size for m in msgs]
-            small = max(sizes) <= 4 * max(1, min(sizes))
-            if uniq and one_pair and small and max_deg > 4 * math.ceil(
-                    math.log2(p)):
-                method = "bruck"
-            else:
-                method = "direct"
-
-    if method == "fused_ag":
-        src_slot, dst_slot, w, src_off = _detect_allgather(msgs, p)
+    if plan.method == "fused_ag":
+        w = plan.fused_w
+        m0 = msgs[0]
+        src_slot, dst_slot = m0.src_slot, m0.dst_slot
+        src_off = np.asarray(plan.ag_src_off, np.int32)
         sval = registry.value(src_slot)
         if (src_off == src_off[0]).all():
             x = lax.dynamic_slice(sval, (int(src_off[0]),), (w,))
         else:
-            x = _gather_payload(sval, src_off.astype(np.int32), w, myid, None)
+            x = _gather_payload(sval, src_off, w, myid, None)
         axis = axes if len(axes) > 1 else axes[0]
         x, scale = _maybe_compress(x, attrs)
         y = lax.all_gather(x, axis, tiled=True)
@@ -548,21 +824,18 @@ def execute_sync(registry: SlotRegistry, queue: List[Msg], p: int,
             y = (y.reshape(p, w).astype(jnp.float32)
                  * scales[:, None]).reshape(p * w).astype(src_slot.dtype)
         dst = registry.value(dst_slot)
-        if len(msgs) == p * (p - 1):
+        if plan.ag_exclude_self:
             # exclude-self variant: keep own chunk as-is
             own = lax.dynamic_slice(dst, (myid * w,), (w,))
             y = lax.dynamic_update_slice(y, own, (myid * w,))
         registry.set_value(dst_slot,
                            lax.dynamic_update_slice(dst, y, (0,)))
-        itemsize = 1 if scale is not None else jnp.dtype(src_slot.dtype).itemsize
-        for pid in range(p):
-            wire_sent[pid] = (p - 1) * w * itemsize
-            wire_recv[pid] = (p - 1) * w * itemsize
-        return plan_cost(msgs, p, attrs, label, "fused_ag", 1,
-                         wire_sent, wire_recv)
+        return plan.cost_with_label(label)
 
-    if method == "fused":
-        src_slot, dst_slot, w = _detect_total_exchange(msgs, p)
+    if plan.method == "fused":
+        w = plan.fused_w
+        m0 = msgs[0]
+        src_slot, dst_slot = m0.src_slot, m0.dst_slot
         x = registry.value(src_slot)[: p * w].reshape(p, w)
         axis = axes if len(axes) > 1 else axes[0]
         scale = None
@@ -582,34 +855,45 @@ def execute_sync(registry: SlotRegistry, queue: List[Msg], p: int,
         dst = registry.value(dst_slot)
         registry.set_value(dst_slot,
                            lax.dynamic_update_slice(dst, y, (0,)))
-        itemsize = 1 if scale is not None else jnp.dtype(src_slot.dtype).itemsize
-        for pid in range(p):
-            wire_sent[pid] = (p - 1) * w * itemsize
-            wire_recv[pid] = (p - 1) * w * itemsize
-        return plan_cost(msgs, p, attrs, label, "fused", 1,
-                         wire_sent, wire_recv)
+        return plan.cost_with_label(label)
 
-    if method == "valiant":
+    if plan.method == "valiant":
         if scratch is None:
-            raise LPFFatalError("valiant routing needs a scratch slot; the "
-                                "context provisions one via "
-                                "resize_message_queue(payload=...)")
-        ph1, ph2 = _valiant_split(msgs, p, attrs.valiant_seed, scratch)
+            raise LPFFatalError("valiant plan lowered without a scratch slot")
+        ph1, ph2 = _valiant_phase_msgs(msgs, plan.valiant_order,
+                                       plan.valiant_via, plan.valiant_off,
+                                       scratch)
         sub = attrs.replace(method="direct")
-        r1 = _execute_direct(registry, ph1, p, axes, myid, sub,
-                             wire_sent, wire_recv)
-        r2 = _execute_direct(registry, ph2, p, axes, myid, sub,
-                             wire_sent, wire_recv)
-        return plan_cost(msgs, p, attrs, label, "valiant", r1 + r2,
-                         wire_sent, wire_recv)
+        _execute_direct(registry, ph1, plan.valiant_phase1, p, axes, myid,
+                        sub)
+        _execute_direct(registry, ph2, plan.valiant_phase2, p, axes, myid,
+                        sub)
+        return plan.cost_with_label(label)
 
-    if method == "bruck":
-        rounds = _execute_bruck(registry, msgs, p, axes, myid, attrs,
-                                wire_sent, wire_recv)
-        return plan_cost(msgs, p, attrs, label, "bruck", rounds,
-                         wire_sent, wire_recv)
+    if plan.method == "bruck":
+        _execute_bruck(registry, msgs, plan, p, axes, myid)
+        return plan.cost_with_label(label)
 
-    rounds = _execute_direct(registry, msgs, p, axes, myid, attrs,
-                             wire_sent, wire_recv)
-    return plan_cost(msgs, p, attrs, label, "direct", rounds,
-                     wire_sent, wire_recv)
+    _execute_direct(registry, msgs, plan.rounds, p, axes, myid, attrs)
+    return plan.cost_with_label(label)
+
+
+# ==========================================================================
+# entry point (plan + execute in one call)
+# ==========================================================================
+
+def execute_sync(registry: SlotRegistry, queue: Sequence[Msg], p: int,
+                 axes: AxisNames, myid, attrs: SyncAttributes,
+                 label: str, scratch: Optional[Slot] = None,
+                 cache: Optional[PlanCache] = None) -> SuperstepCost:
+    """Run one superstep; mutates registry values; returns its cost record.
+
+    With ``cache`` the planning stage is memoised; pass ``None`` to force
+    a fresh planning pass (the original single-stage behaviour)."""
+    msgs = list(queue)
+    if cache is not None:
+        plan = cache.get_or_plan(msgs, p, attrs, scratch)
+    else:
+        plan = plan_sync(msgs, p, attrs, scratch)
+    return execute_plan(plan, registry, msgs, p, axes, myid, attrs, label,
+                        scratch=scratch)

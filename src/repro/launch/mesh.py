@@ -7,6 +7,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.core import compat
+
 __all__ = ["make_production_mesh", "make_mesh", "dp_axes_of", "model_axis_of"]
 
 
@@ -15,8 +17,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     pods = 512 chips with a leading DCN ``pod`` axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...],
@@ -25,8 +26,7 @@ def make_mesh(shape: Tuple[int, ...],
     if axes is None:
         axes = ("pod", "data", "model")[-len(shape):] if len(shape) <= 3 \
             else tuple(f"ax{i}" for i in range(len(shape)))
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

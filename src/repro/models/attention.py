@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 __all__ = ["blocked_attention", "decode_attention", "attention"]
 
 
@@ -160,7 +162,7 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
         return out.reshape(qb.shape[0], H, D).astype(qb.dtype)
 
     bspec = P(batch_axes)
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axes, None, None),
                   P(batch_axes, seq_axes, None, None),

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 __all__ = ["MoEConfig", "moe_params", "moe_apply"]
 
 
@@ -111,7 +113,7 @@ def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig, *,
         return out.reshape(Bl, S, D).astype(xb.dtype)
 
     dp = tuple(dp_axes) or None
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, None, None),
                   P(None, None),

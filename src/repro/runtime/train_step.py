@@ -24,7 +24,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.bsp.pod_sync import pod_allreduce
-from repro.core import CostLedger, LPF_SYNC_DEFAULT, SyncAttributes
+from repro.core import CostLedger, LPF_SYNC_DEFAULT, SyncAttributes, compat
 from repro.models import Runtime, init_params, loss_fn, decode_step, init_caches
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -150,7 +150,7 @@ def build_train_step(cfg: ModelConfig, mesh, *,
         def step_core(params, opt, batch):
             bspecs = jax.tree.map(
                 lambda l: P("pod", *([None] * (l.ndim - 1))), batch)
-            fn = jax.shard_map(
+            fn = compat.shard_map(
                 pod_body, mesh=mesh,
                 in_specs=(rep(params), rep(opt), bspecs),
                 out_specs=(rep(params), rep(opt),

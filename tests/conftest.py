@@ -8,25 +8,29 @@ device 0).  The 512-device production override belongs exclusively to
 """
 
 import os
+import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax  # noqa: E402
+# `python -m pytest` from the repo root works without an installed package
+# or a PYTHONPATH export (the tier-1 command still sets one; harmless).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+from repro.core import compat  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh8():
-    return jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((8,), ("x",))
 
 
 @pytest.fixture(scope="session")
 def mesh_pdm():
     """Tiny (pod, data, model) mesh for multi-axis tests."""
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 @pytest.fixture()

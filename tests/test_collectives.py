@@ -7,7 +7,9 @@ import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import bsp, core as lpf
-from repro.core import CompressSpec, SyncAttributes
+from repro.core import CompressSpec, SyncAttributes, compat
+
+pytestmark = pytest.mark.slow
 
 
 def test_collectives_suite(mesh8):
@@ -61,7 +63,7 @@ def test_cross_pod_grad_sync(mesh_pdm):
     sync = bsp.build_cross_pod_sync(mesh_pdm, specs)
     gw = jax.device_put(grads["w"], NamedSharding(mesh_pdm, specs["w"]))
     gb = jax.device_put(grads["b"], NamedSharding(mesh_pdm, specs["b"]))
-    with jax.set_mesh(mesh_pdm):
+    with compat.set_mesh(mesh_pdm):
         out = jax.jit(sync)({"w": gw, "b": gb})
     # pods hold identical replicas here -> mean equals input
     np.testing.assert_allclose(np.asarray(out["w"]), grads["w"], rtol=1e-6)
@@ -81,9 +83,9 @@ def test_pod_allreduce_ring(mesh_pdm):
         out = pod_allreduce(local, 2, "pod", ledger=ledger)
         return out["g"]
 
-    fn = jax.shard_map(body, mesh=mesh_pdm, in_specs=P(),
-                       out_specs=P(), axis_names={"pod"}, check_vma=False)
-    with jax.set_mesh(mesh_pdm):
+    fn = compat.shard_map(body, mesh=mesh_pdm, in_specs=P(),
+                          out_specs=P(), axis_names={"pod"}, check_vma=False)
+    with compat.set_mesh(mesh_pdm):
         out = jax.jit(fn)(jnp.ones(4))
     np.testing.assert_allclose(np.asarray(out), 6.0)   # mean(1, 11)
     assert ledger.records and ledger.records[0].method.startswith("ring")
@@ -100,9 +102,9 @@ def test_pod_allreduce_compressed(mesh_pdm):
                                 compress=CompressSpec(bits=8)))
         return out["g"]
 
-    fn = jax.shard_map(body, mesh=mesh_pdm, in_specs=P(),
-                       out_specs=P(), axis_names={"pod"}, check_vma=False)
-    with jax.set_mesh(mesh_pdm):
+    fn = compat.shard_map(body, mesh=mesh_pdm, in_specs=P(),
+                          out_specs=P(), axis_names={"pod"}, check_vma=False)
+    with compat.set_mesh(mesh_pdm):
         out = np.asarray(jax.jit(fn)(jnp.linspace(-1, 1, 32)))
     want = np.linspace(-1, 1, 32) * 1.5
     assert np.abs(out - want).max() < 0.05
@@ -127,8 +129,8 @@ def test_fft_compliance_hlo_vs_ledger(mesh8):
         ledger_box["l"] = ctx.ledger
         return spmd(ctx, ctx.pid, ctx.p, xt)
 
-    fn = jax.jit(jax.shard_map(wrapped, mesh=mesh8, in_specs=(P(),),
-                               out_specs=P("x"), check_vma=False))
+    fn = jax.jit(compat.shard_map(wrapped, mesh=mesh8, in_specs=(P(),),
+                                  out_specs=P("x"), check_vma=False))
     x = jnp.zeros(n, jnp.complex64)
     compiled = fn.lower(x).compile()
     stats = parse_collectives(compiled.as_text())

@@ -3,11 +3,15 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.algorithms import (banded_graph, bsp_fft, dataflow_pagerank,
                               fft_h_bytes, lpf_pagerank, partition_graph,
                               reference_pagerank, rmat_graph)
+
+pytestmark = pytest.mark.slow
 
 
 @pytest.mark.parametrize("n", [64, 512, 4096])

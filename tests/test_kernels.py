@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention
@@ -11,6 +13,8 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.fft_stage import ops as fft_ops
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
+
+pytestmark = pytest.mark.slow
 
 
 def t(rng, shape, dt=jnp.float32):

@@ -10,7 +10,8 @@ from repro import core as lpf
 from repro.core import (CompressSpec, LPFCapacityError, LPFFatalError,
                         SyncAttributes)
 
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+pytestmark = [pytest.mark.filterwarnings("ignore::DeprecationWarning"),
+              pytest.mark.slow]
 
 
 def run8(mesh8, spmd, args=None, out_specs=P("x"), **kw):

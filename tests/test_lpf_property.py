@@ -9,11 +9,15 @@ exact BSP h-relation of the pattern.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the [test] extra")
 from hypothesis import HealthCheck, given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro import core as lpf
 from repro.core import SyncAttributes
+
+pytestmark = pytest.mark.slow
 
 P_PROCS = 8
 SLOT = 16

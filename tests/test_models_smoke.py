@@ -12,6 +12,8 @@ from repro.configs import ARCHS, get_config
 from repro.models import (Runtime, count_params, decode_step, init_caches,
                           init_params, loss_fn, prefill)
 
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, rng, B=2, S=64):
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),

@@ -8,10 +8,13 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
+from repro.core import compat
 from repro.core.hlo_analysis import (RooflineTerms, parse_collectives,
                                      roofline_terms)
 from repro.models import init_params
 from repro.sharding.rules import batch_specs, cache_specs, param_specs
+
+pytestmark = pytest.mark.slow
 
 
 # ---------------------------------------------------------------------------
@@ -44,8 +47,7 @@ def test_param_specs_names(mesh_pdm):
 
 
 def test_specs_drop_missing_axes():
-    mesh_d = jax.make_mesh((8,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_d = compat.make_mesh((8,), ("data",))
     cfg = get_config("llama3.2-1b", smoke=True)
     shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
     specs = param_specs(shapes, mesh_d)
@@ -137,8 +139,8 @@ def test_parse_collectives_sample():
 def test_parse_collectives_real_psum(mesh8):
     def f(x):
         return jax.lax.psum(x, "x")
-    fn = jax.jit(jax.shard_map(f, mesh=mesh8, in_specs=P("x"),
-                               out_specs=P()))
+    fn = jax.jit(compat.shard_map(f, mesh=mesh8, in_specs=P("x"),
+                                  out_specs=P()))
     c = fn.lower(jnp.zeros(64, jnp.float32)).compile()
     stats = parse_collectives(c.as_text())
     assert stats.count_by_kind.get("all-reduce", 0) >= 1
@@ -209,8 +211,8 @@ def test_loop_aware_census_real_scan(mesh8):
         h, _ = jax.lax.scan(body, x, w)
         return h
 
-    fn = jax.jit(jax.shard_map(f, mesh=mesh8, in_specs=(P(), P()),
-                               out_specs=P(), check_vma=False))
+    fn = jax.jit(compat.shard_map(f, mesh=mesh8, in_specs=(P(), P()),
+                                  out_specs=P(), check_vma=False))
     c = fn.lower(jnp.zeros((8, 16)), jnp.zeros((5, 16, 16))).compile()
     stats, _ = loop_aware_census(c.as_text())
     # 5 loop iterations x 1 psum of [8,16] f32

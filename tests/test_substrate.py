@@ -15,6 +15,8 @@ from repro.optim import (AdamWConfig, adafactor_init, adafactor_update,
                          ef_decompress, ef_init, warmup_cosine)
 from repro.runtime.monitor import StragglerMonitor
 
+pytestmark = pytest.mark.slow
+
 
 # ---------------------------------------------------------------------------
 # optimizers

@@ -1,0 +1,347 @@
+"""Planner unit/property tests — the plan/execute split pays off here.
+
+:func:`repro.core.plan_sync` is pure Python over static metadata, so the
+superstep compiler's invariants (round validity, CRCW arbitration, cost
+prediction, cache behaviour) are checked in milliseconds without touching
+a mesh or XLA.  Property tests run under hypothesis when the ``[test]``
+extra is installed and fall back to a fixed seed sweep otherwise; the one
+XLA test at the bottom (cache + ledger compliance on a real mesh) is
+marked ``slow``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (LPF_SYNC_DEFAULT, LPFFatalError, Msg, PlanCache,
+                        Slot, SyncAttributes, plan_cost, plan_signature,
+                        plan_sync)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.fast
+
+
+def table_property(fn):
+    """Run ``fn(seed)`` over many seeds: hypothesis-driven (with
+    shrinking) when available, a fixed sweep otherwise."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=60, deadline=None)(
+            given(st.integers(0, 2**31 - 1))(fn))
+    return pytest.mark.parametrize("seed", range(40))(fn)
+
+
+def make_slot(sid, size, dtype="float32", kind="global", name=None):
+    return Slot(sid=sid, name=name or f"s{sid}", size=size,
+                dtype=np.dtype(dtype), kind=kind, orig_shape=(size,))
+
+
+def random_table(seed):
+    """A random legal h-relation: (p, msgs)."""
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(2, 9))
+    dtype = rng.choice(["float32", "int32", "float64"])
+    slots = [make_slot(100 + i, int(rng.integers(8, 33)), dtype)
+             for i in range(int(rng.integers(1, 4)))]
+    msgs = []
+    for _ in range(int(rng.integers(1, 16))):
+        a = slots[int(rng.integers(len(slots)))]
+        b = slots[int(rng.integers(len(slots)))]
+        size = int(rng.integers(1, min(a.size, b.size) + 1))
+        msgs.append(Msg(
+            src=int(rng.integers(p)), dst=int(rng.integers(p)),
+            src_slot=a, src_off=int(rng.integers(a.size - size + 1)),
+            dst_slot=b, dst_off=int(rng.integers(b.size - size + 1)),
+            size=size))
+    return p, msgs
+
+
+def rounds_of(plan):
+    assert plan.method == "direct"
+    return plan.rounds
+
+
+# ---------------------------------------------------------------------------
+# direct-method round structure
+# ---------------------------------------------------------------------------
+
+@table_property
+def test_rounds_form_partial_permutations(seed):
+    """No round sends twice from one PID or receives twice at one PID."""
+    p, msgs = random_table(seed)
+    plan = plan_sync(msgs, p, SyncAttributes(method="direct"))
+    for rd in rounds_of(plan):
+        srcs = [msgs[i].src for i in rd.msg_idx]
+        dsts = [msgs[i].dst for i in rd.msg_idx]
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+        # one source and one destination slot per round
+        assert len({msgs[i].src_slot.sid for i in rd.msg_idx}) == 1
+        assert len({msgs[i].dst_slot.sid for i in rd.msg_idx}) == 1
+        # padding covers every member message
+        assert rd.size == max(msgs[i].size for i in rd.msg_idx)
+
+
+@table_property
+def test_every_message_scheduled_exactly_once(seed):
+    p, msgs = random_table(seed)
+    plan = plan_sync(msgs, p, SyncAttributes(method="direct"))
+    placed = [i for rd in rounds_of(plan) for i in rd.msg_idx]
+    assert sorted(placed) == list(range(len(msgs)))
+
+
+def _conflicting(a, b):
+    return (a.dst == b.dst and a.dst_slot.sid == b.dst_slot.sid
+            and a.dst_off < b.dst_off + b.size
+            and b.dst_off < a.dst_off + a.size)
+
+
+@table_property
+def test_crcw_conflicts_ordered_by_source_pid(seed):
+    """Overlapping writes land in strictly increasing rounds following the
+    ascending (src, dst, dst_off) arbitration order, so the highest
+    source PID writes last — the CRCW refinement the paper's S2.1 allows."""
+    p, msgs = random_table(seed)
+    plan = plan_sync(msgs, p, SyncAttributes(method="direct"))
+    round_no = {}
+    for r, rd in enumerate(rounds_of(plan)):
+        for i in rd.msg_idx:
+            round_no[i] = r
+    for i, a in enumerate(msgs):
+        for j, b in enumerate(msgs):
+            if i == j or not _conflicting(a, b):
+                continue
+            if a.src_slot.sid != b.src_slot.sid:
+                continue  # cross-group ordering is by group position
+            if (a.src, a.dst, a.dst_off) < (b.src, b.dst, b.dst_off):
+                assert round_no[i] < round_no[j], (a, b)
+
+
+# ---------------------------------------------------------------------------
+# cost prediction
+# ---------------------------------------------------------------------------
+
+@table_property
+def test_planned_cost_matches_plan_cost(seed):
+    """The plan's embedded cost must be exactly what ``plan_cost`` derives
+    for the same method/round/wire decision — and the h-relation must be
+    reproducible from the raw table by an independent oracle."""
+    p, msgs = random_table(seed)
+    plan = plan_sync(msgs, p, LPF_SYNC_DEFAULT)
+
+    sent = np.zeros(p, np.int64)
+    recv = np.zeros(p, np.int64)
+    for m in msgs:
+        if m.src != m.dst:
+            nbytes = m.size * np.dtype(m.src_slot.dtype).itemsize
+            sent[m.src] += nbytes
+            recv[m.dst] += nbytes
+    assert plan.cost.h_bytes == max(int(sent.max()), int(recv.max()))
+    assert plan.cost.n_msgs == len(msgs)
+    assert plan.cost.label == ""
+    assert plan.cost.rounds >= 1
+    # wire >= h for any non-fused method (padding and Bruck only inflate)
+    assert plan.cost.wire_bytes >= plan.cost.h_bytes \
+        or plan.cost.method in ("fused", "fused_ag")
+    # rebuild through the public plan_cost with the plan's own decisions
+    re = plan_cost(msgs, p, LPF_SYNC_DEFAULT, "x", plan.cost.method,
+                   plan.cost.rounds, {}, {})
+    assert re.h_bytes == plan.cost.h_bytes
+    assert re.n_msgs == plan.cost.n_msgs
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+@table_property
+def test_cache_hits_on_equivalent_table_with_fresh_slots(seed):
+    """Re-registering the same pattern through new slots (what the BSP
+    collectives do on every call) must reuse the cached plan."""
+    p, msgs = random_table(seed)
+    remap = {}
+
+    def clone_slot(s):
+        if s.sid not in remap:
+            remap[s.sid] = make_slot(500 + len(remap), s.size, s.dtype)
+        return remap[s.sid]
+
+    msgs2 = [dataclasses.replace(m, src_slot=clone_slot(m.src_slot),
+                                 dst_slot=clone_slot(m.dst_slot))
+             for m in msgs]
+    cache = PlanCache()
+    plan1 = cache.get_or_plan(msgs, p, LPF_SYNC_DEFAULT)
+    plan2 = cache.get_or_plan(msgs2, p, LPF_SYNC_DEFAULT)
+    assert cache.stats.misses == 1 and cache.stats.hits == 1
+    assert plan1 is plan2
+    assert plan_signature(msgs, p, LPF_SYNC_DEFAULT) == \
+        plan_signature(msgs2, p, LPF_SYNC_DEFAULT)
+
+
+def test_cache_misses_on_permuted_table():
+    """CRCW arbitration is order-sensitive, so a permuted table is a
+    different superstep and must re-plan."""
+    a = make_slot(1, 16)
+    b = make_slot(2, 16)
+    m1 = Msg(0, 1, a, 0, b, 0, 4)
+    m2 = Msg(1, 2, a, 4, b, 4, 4)
+    cache = PlanCache()
+    cache.get_or_plan([m1, m2], 4, LPF_SYNC_DEFAULT)
+    cache.get_or_plan([m2, m1], 4, LPF_SYNC_DEFAULT)
+    assert cache.stats.misses == 2 and cache.stats.hits == 0
+
+
+def test_cache_misses_on_different_attrs_and_p():
+    a = make_slot(1, 16)
+    b = make_slot(2, 16)
+    msgs = [Msg(0, 1, a, 0, b, 0, 4)]
+    cache = PlanCache()
+    cache.get_or_plan(msgs, 4, LPF_SYNC_DEFAULT)
+    cache.get_or_plan(msgs, 8, LPF_SYNC_DEFAULT)
+    cache.get_or_plan(msgs, 4, SyncAttributes(no_conflict=True))
+    cache.get_or_plan(msgs, 4, SyncAttributes(method="direct"))
+    assert cache.stats.misses == 4 and cache.stats.hits == 0
+
+
+def test_cache_lru_eviction():
+    a = make_slot(1, 16)
+    b = make_slot(2, 16)
+    cache = PlanCache(maxsize=2)
+    for dst in (1, 2, 3):
+        cache.get_or_plan([Msg(0, dst, a, 0, b, 0, 4)], 4, LPF_SYNC_DEFAULT)
+    assert len(cache) == 2
+    # oldest (dst=1) was evicted -> re-planning it is a miss
+    cache.get_or_plan([Msg(0, 1, a, 0, b, 0, 4)], 4, LPF_SYNC_DEFAULT)
+    assert cache.stats.misses == 4
+
+
+# ---------------------------------------------------------------------------
+# CRCW arbitration, fast paths, methods — handcrafted cases
+# ---------------------------------------------------------------------------
+
+def test_crcw_highest_pid_wins_at_plan_level():
+    a = make_slot(1, 8)
+    b = make_slot(2, 8)
+    low = Msg(0, 1, a, 0, b, 0, 4)
+    high = Msg(2, 1, a, 0, b, 2, 4)   # overlaps [2, 4) of low's write
+    plan = plan_sync([low, high], 4, SyncAttributes(method="direct"))
+    rnd = {i: r for r, rd in enumerate(plan.rounds) for i in rd.msg_idx}
+    assert rnd[1] > rnd[0]            # higher source PID applied later
+    # the no-conflict assertion skips arbitration but still yields a
+    # legal schedule (same-destination messages serialise regardless)
+    relaxed = plan_sync([low, high], 4,
+                        SyncAttributes(method="direct", no_conflict=True))
+    assert sorted(i for rd in relaxed.rounds for i in rd.msg_idx) == [0, 1]
+
+
+def test_total_exchange_classified_fused():
+    p, w = 4, 3
+    a = make_slot(1, p * w)
+    b = make_slot(2, p * w)
+    msgs = [Msg(s, d, a, d * w, b, s * w, w)
+            for s in range(p) for d in range(p)]
+    plan = plan_sync(msgs, p, LPF_SYNC_DEFAULT)
+    assert plan.method == "fused" and plan.fused_w == w
+    assert plan.cost.rounds == 1
+    assert plan.cost.wire_bytes == (p - 1) * w * 4
+
+
+def test_allgather_classified_fused_ag():
+    p, w = 4, 5
+    a = make_slot(1, w)
+    b = make_slot(2, p * w)
+    msgs = [Msg(s, d, a, 0, b, s * w, w)
+            for s in range(p) for d in range(p)]
+    plan = plan_sync(msgs, p, LPF_SYNC_DEFAULT)
+    assert plan.method == "fused_ag" and plan.fused_w == w
+    assert plan.ag_src_off == (0,) * p and not plan.ag_exclude_self
+    assert plan.cost.rounds == 1
+
+
+def test_bruck_round_count_and_validation():
+    p = 8
+    a = make_slot(1, p)
+    b = make_slot(2, p)
+    msgs = [Msg(s, (s + k) % p, a, 0, b, s % (p - 1), 1)
+            for s in range(p) for k in (1, 2)]
+    plan = plan_sync(msgs, p, SyncAttributes(method="bruck"))
+    assert plan.method == "bruck"
+    assert 1 <= plan.cost.rounds <= int(np.ceil(np.log2(p)))
+    for step, rows in plan.bruck_steps:
+        assert all(1 <= r < p and (r & step) for r in rows)
+    with pytest.raises(LPFFatalError):
+        plan_sync(msgs + [msgs[0]], p, SyncAttributes(method="bruck"))
+
+
+def test_p1_and_empty_plans():
+    a = make_slot(1, 8)
+    b = make_slot(2, 8)
+    plan = plan_sync([Msg(0, 0, a, 0, b, 0, 8)], 1, LPF_SYNC_DEFAULT)
+    assert plan.method == "seq" and plan.cost.method == "noop"
+    assert plan.cost.rounds == 0 and plan.cost.wire_bytes == 0
+    empty = plan_sync([], 8, LPF_SYNC_DEFAULT)
+    assert empty.method == "noop" and empty.cost.n_msgs == 0
+
+
+def test_plan_validates_the_table():
+    a = make_slot(1, 8)
+    b = make_slot(2, 8)
+    with pytest.raises(LPFFatalError):       # destination range OOB
+        plan_sync([Msg(0, 1, a, 0, b, 6, 4)], 4, LPF_SYNC_DEFAULT)
+    with pytest.raises(LPFFatalError):       # pid out of range
+        plan_sync([Msg(0, 9, a, 0, b, 0, 4)], 4, LPF_SYNC_DEFAULT)
+    local = make_slot(3, 8, kind="local")
+    with pytest.raises(LPFFatalError):       # remote side must be global
+        plan_sync([Msg(0, 1, a, 0, local, 0, 4, origin="put")], 4,
+                  LPF_SYNC_DEFAULT)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: one planning pass for repeated supersteps, ledger == plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cache_one_planning_pass_and_ledger_compliance(mesh8):
+    """Two ``sync()`` calls with the identical message table plan once,
+    and the executed ledger entries equal the plan's predicted cost."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import core as lpf
+    from repro.core import global_plan_cache
+
+    cache = global_plan_cache()
+    cache.clear()
+
+    def spmd(ctx, s, p, _):
+        ctx.resize_memory_register(2)
+        ctx.resize_message_queue(2 * p)
+        a = ctx.register_global("a", jnp.arange(4.0) + 10.0 * ctx.pid)
+        b = ctx.register_global("b", jnp.zeros(4))
+        for _ in range(2):                       # identical superstep x2
+            ctx.put(a, b, to=lambda s: (s + 1) % p, size=4)
+            ctx.sync(label="shift")
+        return ctx.value(b)
+
+    out, ledger = lpf.exec_(mesh8, spmd, None, out_specs=P("x"),
+                            return_ledger=True)
+    shifted = np.asarray(out).reshape(8, 4)
+    for d in range(8):
+        np.testing.assert_allclose(shifted[d],
+                                   np.arange(4.0) + 10.0 * ((d - 1) % 8))
+    assert cache.stats.misses == 1 and cache.stats.hits == 1
+    first, second = ledger.records
+    assert dataclasses.replace(first, label="") == \
+        dataclasses.replace(second, label="")
+
+    # the executed ledger entry equals a from-scratch plan of the table
+    slot_a = make_slot(0, 4)
+    slot_b = make_slot(1, 4)
+    msgs = [Msg(s, (s + 1) % 8, slot_a, 0, slot_b, 0, 4, origin="put")
+            for s in range(8)]
+    fresh = plan_sync(msgs, 8, LPF_SYNC_DEFAULT)
+    assert dataclasses.replace(fresh.cost, label="shift") == first

@@ -10,12 +10,16 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import bsp, core as lpf
+from repro.core import compat
 from repro.algorithms import (bsp_fft, partition_graph, reference_pagerank,
                               rmat_graph)
 from repro.algorithms.pagerank import pagerank_spmd
+
+pytestmark = pytest.mark.slow
 
 
 def test_model_compliance_pattern_independence(mesh8):
@@ -59,8 +63,7 @@ def test_immortal_fft_any_width(rng):
          ).astype(np.complex64)
     ref = np.fft.fft(x)
     for p in (2, 4, 8):
-        mesh = jax.make_mesh((p,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((p,), ("x",))
         y = bsp_fft(mesh, jnp.asarray(x))
         assert np.abs(np.asarray(y) - ref).max() / np.abs(ref).max() < 2e-4
 
@@ -92,7 +95,7 @@ def test_interop_hook_inside_host_program(mesh8):
         r_local = lpf.hook(("x",), spmd, args)   # <- the interop call
         return r_local + acc
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         host_program, mesh=mesh8,
         in_specs=({k: P("x") for k in shard},), out_specs=P("x"),
         check_vma=False))

@@ -9,10 +9,13 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import compat
 from repro.data import DataConfig, SyntheticStream
 from repro.optim import AdamWConfig
 from repro.runtime.train_loop import TrainLoopConfig, train_loop
 from repro.runtime.train_step import build_serve_step, build_train_step
+
+pytestmark = pytest.mark.slow
 
 
 def tiny_cfg():
@@ -21,8 +24,7 @@ def tiny_cfg():
 
 
 def mesh_dm():
-    return jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 2), ("data", "model"))
 
 
 def stream_for(cfg, B=8, S=32):
