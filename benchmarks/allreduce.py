@@ -1,0 +1,77 @@
+"""Allreduce sweep: fused reduction supersteps vs coloured rounds.
+
+Times ``bsp.allreduce`` two ways over p in {4, 8} and n up to 2**22:
+
+* ``fused``  — the default path: the reduce-scatter relation lowers to
+  one ``lax.psum_scatter`` and the allgather to one ``lax.all_gather``
+  (2 rounds total; ledger wire = 2(n/p)(p-1) * 4 bytes per process).
+* ``direct`` — ``SyncAttributes(method="direct")`` forces the generic
+  edge-coloured schedule the collectives paid before reduction
+  supersteps existed: 2(p-1) ``ppermute`` rounds for the same wire.
+
+The fused path must win for n >= 2**20 (the acceptance bar); the gap is
+the l-term the BSP ledger predicts, l * (2p - 4).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import bsp, core as lpf
+from repro.core import SyncAttributes, compat
+
+
+def _time(fn, x, reps=5):
+    jax.block_until_ready(fn(x))           # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _allreduce_fn(mesh, attrs):
+    def spmd(ctx, s, p, x):
+        return bsp.allreduce(ctx, x, attrs=attrs)
+
+    def run(x):
+        return lpf.exec_(mesh, spmd, x, in_specs=P(), out_specs=P("x"))
+
+    return jax.jit(run)
+
+
+def sweep(ps=(4, 8), log_ns=(18, 20, 22), reps=5):
+    rows = []
+    for p in ps:
+        mesh = compat.make_mesh((p,), ("x",))
+        fused = _allreduce_fn(mesh, SyncAttributes())
+        direct = _allreduce_fn(mesh, SyncAttributes(method="direct"))
+        for log_n in log_ns:
+            n = 1 << log_n
+            x = jnp.asarray(np.random.default_rng(0).standard_normal(n),
+                            jnp.float32)
+            t_fused = _time(fused, x, reps)
+            t_direct = _time(direct, x, reps)
+            rows.append((p, n, t_fused, t_direct, t_direct / t_fused))
+    return rows
+
+
+def main(csv=True, log_ns=(18, 20, 22)):
+    rows = sweep(log_ns=log_ns)
+    if csv:
+        print("p,n,t_fused_s,t_direct_s,speedup")
+        for r in rows:
+            print(f"{r[0]},{r[1]},{r[2]:.6f},{r[3]:.6f},{r[4]:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

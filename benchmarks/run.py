@@ -23,11 +23,13 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import fft, hrelation, messages, pagerank, roofline
+    from . import allreduce, fft, hrelation, messages, pagerank, roofline
 
     jobs = {
         "hrelation": lambda: hrelation.main(),
         "messages": lambda: messages.main(),
+        "allreduce": lambda: allreduce.main(
+            log_ns=(16, 18) if args.fast else (18, 20, 22)),
         "fft": lambda: fft.main(max_log2=14 if args.fast else 18),
         "pagerank": lambda: pagerank.main(
             sizes=((1 << 10, 6),) if args.fast

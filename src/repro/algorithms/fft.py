@@ -22,8 +22,10 @@ The algorithm is therefore:
       "k1-major blocked by k2" — exactly the unordered/decimated output
       the paper benchmarks.
 
-BSP cost:  2 (n/p) log(n/p + p) flops  +  (n/p)(p-1)/p * 16 bytes * g
-           + l   (unordered; ordered doubles the comm term).
+BSP cost:  2 (n/p) log(n/p + p) flops  +  (n/p)(p-1)/p * itemsize * g
+           + l   (unordered; ordered doubles the comm term), where
+           itemsize is 8 bytes for complex64 and 16 for complex128 —
+           matching ``fft_h_bytes``'s default of 8.
 
 The process-local FFT runs through ``repro.kernels.fft_stage`` (Pallas,
 TPU-tiled) when ``use_kernel=True``, else ``jnp.fft.fft``.
@@ -51,7 +53,10 @@ def fft_flops(n: int) -> float:
 
 def fft_h_bytes(n: int, p: int, ordered: bool = True,
                 itemsize: int = 8) -> int:
-    """Predicted h-relation (bytes) of the BSP FFT — the immortal cost."""
+    """Predicted h-relation (bytes) of the BSP FFT — the immortal cost.
+
+    ``itemsize`` is the *complex* element width: 8 for complex64 (the
+    default, matching the benchmarks) and 16 for complex128."""
     if p == 1:
         return 0
     one = (n // p) * (p - 1) // p * itemsize
@@ -94,9 +99,12 @@ def bsp_fft_spmd(ctx: LPFContext, x_local: jnp.ndarray, n: int, *,
     if p == 1:
         return X / n if inverse else X
 
-    # (1) time-shifted twiddle  w_n^{+- s k2}
-    k2 = jnp.arange(npp)
-    phase = sign * 2.0 * jnp.pi * (s.astype(jnp.float32) * k2 / n)
+    # (1) time-shifted twiddle  w_n^{+- s k2}, built in the real dtype
+    # matching the input's precision (float64 for complex128 inputs —
+    # a float32 phase costs ~1e-4 relative error at n >= 2**16)
+    real_dt = jnp.finfo(ctype).dtype
+    k2 = jnp.arange(npp, dtype=real_dt)
+    phase = (s.astype(real_dt) * k2 / n) * real_dt.type(sign * 2.0 * np.pi)
     Z = X * jax.lax.complex(jnp.cos(phase), jnp.sin(phase)).astype(ctype)
 
     # (2) the single redistribution: block d of my k2-range to process d

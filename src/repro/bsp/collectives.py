@@ -5,15 +5,25 @@ Bisseling) — *immortal* in the paper's sense: their cost is provable from
 (p, g, l) alone and holds on any compliant layer.
 
 ============  ========================================  ==================
-collective    algorithm                                  BSP cost
+collective    algorithm (fused superstep methods)        BSP cost
 ============  ========================================  ==================
-broadcast     two-phase: scatter + allgather             2(n/p)(p-1)g + 2l
-allgather     one superstep (fused all-gather path)      (n/p)(p-1)g + l
+broadcast     fused_scatter + fused_ag                   2(n/p)(p-1)g + 2l
+allgather     one superstep (fused_ag)                   (n/p)(p-1)g + l
 alltoall      one superstep (fused total exchange)       (n/p)(p-1)g + l
-reduce        scatter(+local sum) to root chunks         ~2(n/p)(p-1)g + 2l
-allreduce     scatter-reduce + allgather                 2(n/p)(p-1)g + 2l
-scan          local scan + allgather of partials + fix   (p-1)wg + l
+reduce        fused_rs + fused_gather to root            2(n/p)(p-1)g + 2l
+allreduce     fused_rs + fused_ag                        2(n/p)(p-1)g + 2l
+exscan        allgather of partials + local sum          (p-1)wg + l
 ============  ========================================  ==================
+
+``reduce`` and ``allreduce`` stage *accumulating-put* supersteps
+(``attrs.reduce_op``): the reduce-scatter relation — every process puts
+chunk d at the same destination offset on process d, conflicting writes
+combining — lowers to a single ``lax.psum_scatter`` (or ``all_to_all``
++ local combine for max/min), so the ledger's promise and the compiled
+HLO are both one collective per superstep.  Ops other than
+``jnp.add``/``jnp.maximum``/``jnp.minimum`` (or any op under wire
+compression) fall back to the total-exchange + local-reduce algorithm —
+same BSP cost, more rounds on the wire.
 
 ``allreduce`` with ``CompressSpec`` quantises the wire payload (the
 paper's relaxed-guarantee sync attribute): effective g drops by ~4x for
@@ -43,12 +53,22 @@ import numpy as np
 
 from repro.core import LPFContext, LPF_SYNC_DEFAULT, SyncAttributes
 from repro.core.errors import LPFFatalError
+from repro.core.sync import _REDUCE_FNS
 
 __all__ = ["broadcast", "allgather", "alltoall", "allreduce", "reduce",
            "exscan", "pad_to"]
 
 
 def pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Zero-pad a 1-D array to length ``n``."""
+    if x.ndim != 1:
+        raise LPFFatalError(
+            f"pad_to expects a 1-D array, got shape {tuple(x.shape)}; "
+            f"flatten tensors before padding")
+    if x.shape[0] > n:
+        raise LPFFatalError(
+            f"pad_to cannot shrink: input length {x.shape[0]} exceeds "
+            f"target {n}")
     if x.shape[0] == n:
         return x
     return jnp.concatenate([x, jnp.zeros(n - x.shape[0], x.dtype)])
@@ -56,6 +76,29 @@ def pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
 
 def _chunk(n: int, p: int) -> int:
     return -(-n // p)  # ceil
+
+
+def _reduce_op_name(op: Callable) -> Optional[str]:
+    """Name of ``op`` in the planner's accumulating-put vocabulary
+    (single source of truth: ``repro.core.sync._REDUCE_FNS``)."""
+    for name, fn in _REDUCE_FNS.items():
+        if op is fn:
+            return name
+    return None
+
+
+def _use_fused_reduction(op: Callable, attrs: SyncAttributes
+                         ) -> Optional[str]:
+    """The reduce_op to stage, or None when the generic exchange
+    algorithm must run instead: exotic combine fn, compressed wire
+    (quantised payloads cannot be combined before dequantisation), or
+    an explicit bruck/valiant method request (those schedules cannot
+    combine conflicting writes)."""
+    red_op = _reduce_op_name(op)
+    if red_op is None or attrs.compress is not None \
+            or attrs.method in ("bruck", "valiant"):
+        return None
+    return red_op
 
 
 def allgather(ctx: LPFContext, x: jnp.ndarray, *,
@@ -107,7 +150,10 @@ def broadcast(ctx: LPFContext, x: jnp.ndarray, root: int = 0, *,
               attrs: SyncAttributes = LPF_SYNC_DEFAULT,
               label: str = "broadcast") -> jnp.ndarray:
     """Two-phase broadcast (scatter + allgather): 2(n/p)(p-1)g + 2l —
-    the BSP-optimal algorithm for n >= p (vs n(p-1)g for the naive put)."""
+    the BSP-optimal algorithm for n >= p (vs n(p-1)g for the naive put).
+    Both phases take fused one-collective supersteps (fused_scatter +
+    fused_ag): 2 rounds total instead of the p+1 coloured rounds of the
+    generic schedule."""
     p = ctx.p
     if p == 1:
         return x
@@ -132,29 +178,103 @@ def broadcast(ctx: LPFContext, x: jnp.ndarray, root: int = 0, *,
     return out
 
 
+def _reduce_scatter_chunk(ctx: LPFContext, xp: jnp.ndarray, c: int,
+                          red_op: str, attrs: SyncAttributes,
+                          label: str):
+    """Stage + sync the fused reduce-scatter superstep: chunk d of every
+    process combines (via ``red_op``) into a [c]-slot on process d.
+    Returns the chunk slot (caller deregisters)."""
+    p = ctx.p
+    src = ctx.register_global(f"{label}.src", xp)
+    buf = ctx.register_global(f"{label}.chunk", jnp.zeros(c, xp.dtype))
+    ctx.put_msgs([(s, d, src, d * c, buf, 0, c)
+                  for s in range(p) for d in range(p)])
+    ctx.sync(attrs.replace(reduce_op=red_op), label=f"{label}.rs")
+    ctx.deregister(src)
+    return buf
+
+
+def _fused_reduction(ctx: LPFContext, x: jnp.ndarray, red_op: str,
+                     attrs: SyncAttributes, label: str, suffix: str,
+                     chunk_dsts: Callable) -> jnp.ndarray:
+    """Shared fused-reduction tail: reduce-scatter the chunks, then a
+    second superstep distributing them per ``chunk_dsts(s, p)`` — every
+    process s's reduced [c]-chunk lands at offset s*c on those pids."""
+    p = ctx.p
+    n = int(x.shape[0])
+    c = _chunk(n, p)
+    ctx.resize_memory_register(ctx.registry.n_active + 3)
+    ctx.resize_message_queue(p * p)
+    buf = _reduce_scatter_chunk(ctx, pad_to(x, c * p), c, red_op, attrs,
+                                label)
+    out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
+    ctx.put_msgs([(s, d, buf, 0, out, s * c, c)
+                  for s in range(p) for d in chunk_dsts(s, p)])
+    ctx.sync(attrs, label=f"{label}.{suffix}")
+    result = ctx.tensor(out)[:n]
+    ctx.deregister(buf)
+    ctx.deregister(out)
+    return result
+
+
 def reduce(ctx: LPFContext, x: jnp.ndarray, root: int = 0, *,
            op: Callable = jnp.add,
            attrs: SyncAttributes = LPF_SYNC_DEFAULT,
            label: str = "reduce") -> jnp.ndarray:
-    """Reduction to ``root``: scatter-reduce then gather chunks at root."""
-    y = allreduce(ctx, x, op=op, attrs=attrs, label=label)
-    return y  # replicated result contains the root value
+    """Genuine two-superstep reduction to ``root``: a fused
+    reduce-scatter of chunks, then a fused gather of the reduced chunks
+    to root — 2(n/p)(p-1)g + 2l, half the rounds and none of the
+    replication of an allreduce.  Non-root processes return zeros (the
+    result is defined at root only, as in the paper's BSP reduce)."""
+    p = ctx.p
+    if p == 1:
+        return x
+    red_op = _use_fused_reduction(op, attrs)
+    if red_op is None:
+        # no fused lowering: reduce via the allreduce algorithm
+        y = _allreduce_exchange(ctx, x, op=op, attrs=attrs, label=label)
+        return jnp.where(ctx.pid == root, y, jnp.zeros_like(y))
+    # superstep 2 gathers the reduced chunks at root (fused_gather)
+    return _fused_reduction(ctx, x, red_op, attrs, label, "gather",
+                            lambda s, p_: (root,))
 
 
 def allreduce(ctx: LPFContext, x: jnp.ndarray, *,
               op: Callable = jnp.add,
               attrs: SyncAttributes = LPF_SYNC_DEFAULT,
               label: str = "allreduce") -> jnp.ndarray:
-    """Two-superstep scatter-reduce + allgather: 2(n/p)(p-1)g + 2l —
-    bandwidth-optimal, matching a ring all-reduce's 2n(p-1)/p volume."""
+    """Two-superstep reduce-scatter + allgather: 2(n/p)(p-1)g + 2l —
+    bandwidth-optimal, matching a ring all-reduce's 2n(p-1)/p volume.
+
+    For sum/max/min without wire compression both supersteps take the
+    fused paths (``lax.psum_scatter`` + ``lax.all_gather``): the ledger
+    records 1 round each, and the compiled HLO carries exactly one
+    reduce-scatter and one all-gather."""
     p = ctx.p
     if p == 1:
         return x
+    red_op = _use_fused_reduction(op, attrs)
+    if red_op is None:
+        return _allreduce_exchange(ctx, x, op=op, attrs=attrs, label=label)
+    # superstep 2 allgathers the reduced chunks to everyone (fused_ag)
+    return _fused_reduction(ctx, x, red_op, attrs, label, "ag",
+                            lambda s, p_: range(p_))
+
+
+def _allreduce_exchange(ctx: LPFContext, x: jnp.ndarray, *,
+                        op: Callable = jnp.add,
+                        attrs: SyncAttributes = LPF_SYNC_DEFAULT,
+                        label: str = "allreduce") -> jnp.ndarray:
+    """The generic algorithm: total exchange + local reduce + allgather.
+    Same 2(n/p)(p-1)g + 2l cost; used when the op has no accumulating-put
+    lowering or the wire is compressed (quantised payloads must be
+    decompressed before they can be combined)."""
+    p = ctx.p
     n = int(x.shape[0])
     c = _chunk(n, p)
     xp = pad_to(x, c * p)
     ctx.resize_memory_register(ctx.registry.n_active + 3)
-    ctx.resize_message_queue(2 * p * p)
+    ctx.resize_message_queue(p * p)
     src = ctx.register_global(f"{label}.src", xp)
     buf = ctx.register_global(f"{label}.buf", jnp.zeros(c * p, x.dtype))
     out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
@@ -186,10 +306,11 @@ def exscan(ctx: LPFContext, x: jnp.ndarray, *,
            attrs: SyncAttributes = LPF_SYNC_DEFAULT,
            label: str = "exscan") -> jnp.ndarray:
     """Exclusive prefix sum over processes of a [w]-vector: local partials
-    are allgathered (w(p-1)g + l) and summed below the caller's pid."""
+    are allgathered through the fused_ag superstep (w(p-1)g + l, one
+    ``lax.all_gather`` on the wire) and summed below the caller's pid."""
     p = ctx.p
     if p == 1:
         return jnp.zeros_like(x)
-    parts = allgather(ctx, x, attrs=attrs, label=label).reshape(p, -1)
+    parts = allgather(ctx, x, attrs=attrs, label=f"{label}.ag").reshape(p, -1)
     mask = (jnp.arange(p) < ctx.pid)[:, None].astype(x.dtype)
     return jnp.sum(parts * mask, axis=0)

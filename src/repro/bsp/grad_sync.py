@@ -3,8 +3,10 @@
 At 1000+ node scale the pod-to-pod (DCN) hop is the slow link; this module
 owns that hop so the paper's sync attributes can be applied to it:
 
-* default      — BSP scatter-reduce + allgather over the ``pod`` axis
-                 (bandwidth-optimal 2n(q-1)/q wire for q pods),
+* default      — BSP reduce-scatter + allgather over the ``pod`` axis
+                 (bandwidth-optimal 2n(q-1)/q wire for q pods), staged
+                 as accumulating-put supersteps so the whole sync is one
+                 ``reduce-scatter`` + one ``all-gather`` on the wire,
 * COMPRESSED   — int8 payloads on the wire (effective g / 4); pair with
                  error feedback (``optim/compress.py``) for convergence,
 * STALE(k)     — handled one level up by the local-SGD runner
@@ -34,10 +36,14 @@ __all__ = ["build_cross_pod_sync", "lpf_allreduce"]
 
 
 def lpf_allreduce(ctx: LPFContext, x: jnp.ndarray, *,
+                  op=jnp.add,
                   attrs: SyncAttributes = LPF_SYNC_DEFAULT,
                   mean: bool = False) -> jnp.ndarray:
-    """Allreduce a flat vector over the context axes; optionally average."""
-    out = collectives.allreduce(ctx, x, attrs=attrs)
+    """Allreduce a flat vector over the context axes; optionally average.
+
+    Rides the fused reduce-scatter + allgather supersteps for
+    sum/max/min (uncompressed), the exchange algorithm otherwise."""
+    out = collectives.allreduce(ctx, x, op=op, attrs=attrs)
     return out / ctx.p if mean else out
 
 

@@ -15,12 +15,22 @@ pod axis, with the paper's sync attributes honoured:
 Lowering note: the q-1-round ring of ``ppermute`` over the pod axis of
 auto-sharded leaves trips an XLA SPMD partitioner CHECK
 (spmd_partitioner_util.cc partition-group mismatch) in partial-manual
-regions, so the exchange lowers through ``lax.psum`` instead — identical
-wire volume for q = 2 (the production pod count) and still a single
-superstep.  Costs are recorded in a :class:`CostLedger` exactly like a
-core sync, so the compliance checker can audit the compiled collectives.
-Must run inside a shard_map region that is *manual over the pod axis*
-(see ``runtime/train_step.py``).
+regions, so the exchange lowers through native reduction collectives
+instead.  Two methods:
+
+* ``rs+ag`` (default when uncompressed) — the gradients are flattened
+  into one vector and synced as an explicit reduce-scatter + all-gather
+  pair (``lax.psum_scatter`` + ``lax.all_gather``): the same fused
+  transports the core planner picks for reduction supersteps, with the
+  2n(q-1)/q wire split across two audited rounds.
+* ``ring``  — one ``lax.psum`` per leaf (XLA's own ring all-reduce);
+  the compressed path always uses this, as int16 summands must be
+  combined before dequantisation.
+
+Costs are recorded in a :class:`CostLedger` exactly like a core sync,
+so the compliance checker can audit the compiled collectives.  Must run
+inside a shard_map region that is *manual over the pod axis* (see
+``runtime/train_step.py``).
 """
 
 from __future__ import annotations
@@ -42,15 +52,64 @@ def _leaf_bytes(tree) -> int:
                for l in jax.tree.leaves(tree))
 
 
+def _rs_ag_allreduce(tree, q: int, axis: str):
+    """Flatten -> reduce-scatter -> all-gather -> unflatten (all f32).
+    Returns the summed tree (f32 leaves) and the per-pod chunk length."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree, 0
+    shapes = [l.shape for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    n = flat.shape[0]
+    m = -(-n // q)
+    if q * m > n:
+        flat = jnp.concatenate([flat, jnp.zeros(q * m - n, jnp.float32)])
+    red = lax.psum_scatter(flat.reshape(q, m), axis,
+                           scatter_dimension=0, tiled=False)
+    full = lax.all_gather(red, axis, tiled=True)[:n]
+    outs = []
+    off = 0
+    for shp in shapes:
+        k = int(np.prod(shp)) if shp else 1
+        outs.append(full[off:off + k].reshape(shp))
+        off += k
+    return jax.tree_util.tree_unflatten(treedef, outs), m
+
+
 def pod_allreduce(tree, q: int, axis: str = "pod", *,
                   attrs: SyncAttributes = LPF_SYNC_DEFAULT,
                   mean: bool = True,
-                  ledger: Optional[CostLedger] = None):
-    """All-reduce a pytree over the ``axis`` of size ``q`` in one
-    superstep; payloads optionally int16-quantised with a shared scale."""
+                  ledger: Optional[CostLedger] = None,
+                  method: str = "auto"):
+    """All-reduce a pytree over the ``axis`` of size ``q``; payloads
+    optionally int16-quantised with a shared scale.
+
+    ``method``: ``auto`` (rs+ag when uncompressed, ring otherwise),
+    ``rs+ag`` (explicit reduce-scatter + all-gather), or ``ring``
+    (one ``lax.psum`` per leaf)."""
     if q <= 1:
         return tree
     compress = attrs.compress is not None
+    if method not in ("auto", "rs+ag", "ring"):
+        raise ValueError(f"unknown pod_allreduce method {method!r}")
+    if method == "auto":
+        method = "ring" if compress else "rs+ag"
+    if method == "rs+ag" and compress:
+        raise ValueError("rs+ag cannot combine quantised payloads; use "
+                         "method='ring' with compression")
+
+    if method == "rs+ag":
+        acc, m = _rs_ag_allreduce(tree, q, axis)
+        if ledger is not None:
+            wire = 2 * (q - 1) * m * 4          # f32 on the wire, per pod
+            ledger.add(SuperstepCost(
+                label=f"pod_allreduce[x{q}]", h_bytes=wire,
+                wire_bytes=wire, total_wire_bytes=wire * q, rounds=2,
+                n_msgs=2 * q * q, method="rs+ag"))
+        if mean:
+            acc = jax.tree.map(lambda a: a / q, acc)
+        return jax.tree.map(lambda a, l: a.astype(l.dtype), acc, tree)
 
     if compress:
         def one(l):

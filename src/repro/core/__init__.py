@@ -20,7 +20,7 @@ Paper primitive             This module
 
 from .attrs import CompressSpec, LPF_SYNC_DEFAULT, SyncAttributes
 from .context import LPFContext, exec_, hook, rehook
-from .cost import CostLedger, SuperstepCost
+from .cost import CostLedger, FUSED_METHODS, SuperstepCost
 from .errors import (LPF_ERR_FATAL, LPF_ERR_OUT_OF_MEMORY, LPF_SUCCESS,
                      LPFCapacityError, LPFError, LPFFatalError)
 from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
@@ -36,7 +36,7 @@ from . import compat
 __all__ = [
     "LPFContext", "exec_", "hook", "rehook",
     "SyncAttributes", "CompressSpec", "LPF_SYNC_DEFAULT",
-    "CostLedger", "SuperstepCost",
+    "CostLedger", "SuperstepCost", "FUSED_METHODS",
     "LPFError", "LPFCapacityError", "LPFFatalError",
     "LPF_SUCCESS", "LPF_ERR_OUT_OF_MEMORY", "LPF_ERR_FATAL",
     "HardwareModel", "LinkModel", "LPFMachine", "probe",

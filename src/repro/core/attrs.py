@@ -11,6 +11,13 @@ names as future work plus the ones the framework needs:
                   routing for skewed relations).
 * ``no_conflict`` — caller asserts no overlapping writes: skips CRCW
                   arbitration ordering so rounds pack tighter (lower l).
+* ``reduce_op``   — accumulating-put supersteps: overlapping destination
+                  writes *combine* elementwise (``sum``/``max``/``min``)
+                  instead of CRCW-arbitrating.  Elements covered by a
+                  single message are written as usual; elements covered
+                  by none keep their pre-superstep value.  Enables the
+                  planner's fused reduce-scatter lowering
+                  (``lax.psum_scatter``) for the canonical pattern.
 * ``compress``  — quantise payloads (e.g. int8) before the wire: lower
                   effective g at a precision cost; used with error
                   feedback by the gradient-sync collectives.
@@ -43,6 +50,9 @@ class CompressSpec:
 class SyncAttributes:
     method: Literal["auto", "direct", "bruck", "valiant"] = "auto"
     no_conflict: bool = False
+    #: combine overlapping destination writes instead of arbitrating;
+    #: one of "sum" | "max" | "min" (None = CRCW overwrite semantics)
+    reduce_op: Optional[Literal["sum", "max", "min"]] = None
     compress: Optional[CompressSpec] = None
     stale: int = 0
     #: two-phase Valiant routing seed (static; randomness is configuration,

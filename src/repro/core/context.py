@@ -93,6 +93,12 @@ class LPFContext:
             raise LPFFatalError("negative queue capacity")
         self._queue_capacity = n_msgs
         if valiant_payload > 0:
+            # re-provisioning replaces the previous scratch slot; keeping
+            # the stale registration would leak register capacity on every
+            # resize call
+            if self._scratch is not None:
+                self.registry.deregister(self._scratch)
+                self._scratch = None
             if self.registry.capacity < self.registry.n_active + 1:
                 self.registry.resize(self.registry.n_active + 1)
             self._scratch = self.registry.register(
@@ -118,7 +124,14 @@ class LPFContext:
     # ------------------------------------------------------------------
     # staging: lpf_put / lpf_get
     # ------------------------------------------------------------------
+    def _require_active(self) -> None:
+        if self._on_hold:
+            raise LPFFatalError(
+                "context is on hold while a rehook sub-program runs; "
+                "active contexts must be disjoint (paper S2.2)")
+
     def _stage(self, msgs: List[Msg]) -> None:
+        self._require_active()
         if len(self._queue) + len(msgs) > self._queue_capacity:
             raise LPFCapacityError(
                 f"message queue capacity {self._queue_capacity} exceeded "
@@ -184,6 +197,7 @@ class LPFContext:
         """Plan (memoised), lower, and account one superstep; returns its
         ledger entry so callers can thread costs through without reading
         the ledger back."""
+        self._require_active()
         label = label or f"superstep[{self.ledger.supersteps}]"
         plan = self.plan_cache.get_or_plan(self._queue, self.p, attrs,
                                            self._scratch)

@@ -16,7 +16,12 @@ from typing import List, Optional
 
 from .machine import LPFMachine
 
-__all__ = ["SuperstepCost", "CostLedger"]
+__all__ = ["SuperstepCost", "CostLedger", "FUSED_METHODS"]
+
+#: methods that lower onto one native XLA collective (single round by
+#: construction; their wire bytes equal the collective's schedule)
+FUSED_METHODS = frozenset(
+    {"fused", "fused_ag", "fused_rs", "fused_scatter", "fused_gather"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,7 +32,11 @@ class SuperstepCost:
     total_wire_bytes: int # sum over processes of bytes on the wire
     rounds: int           # collective launches issued
     n_msgs: int           # messages in the superstep
-    method: str           # direct | bruck | valiant | fused | noop
+    method: str           # direct | bruck | valiant | fused* | noop
+
+    @property
+    def is_fused(self) -> bool:
+        return self.method in FUSED_METHODS
 
     def predicted_seconds(self, machine: LPFMachine) -> float:
         return self.wire_bytes * machine.g + self.rounds * machine.l
@@ -67,16 +76,17 @@ class CostLedger:
         return sum(r.predicted_seconds(machine) for r in self.records)
 
     def report(self, machine: Optional[LPFMachine] = None) -> str:
-        lines = [f"{'label':<28}{'method':<9}{'h(B)':>12}{'wire(B)':>12}"
+        lines = [f"{'label':<28}{'method':<14}{'h(B)':>12}{'wire(B)':>12}"
                  f"{'rounds':>8}{'msgs':>7}"
                  + (f"{'T_pred(us)':>12}" if machine else "")]
         for r in self.records:
-            line = (f"{r.label:<28}{r.method:<9}{r.h_bytes:>12}"
+            line = (f"{r.label:<28}{r.method:<14}{r.h_bytes:>12}"
                     f"{r.wire_bytes:>12}{r.rounds:>8}{r.n_msgs:>7}")
             if machine:
                 line += f"{r.predicted_seconds(machine) * 1e6:>12.2f}"
             lines.append(line)
-        total = (f"{'TOTAL':<28}{'':<9}{self.h_bytes:>12}{self.wire_bytes:>12}"
+        total = (f"{'TOTAL':<28}{'':<14}{self.h_bytes:>12}"
+                 f"{self.wire_bytes:>12}"
                  f"{self.rounds:>8}{sum(r.n_msgs for r in self.records):>7}")
         if machine:
             total += f"{self.predicted_seconds(machine) * 1e6:>12.2f}"

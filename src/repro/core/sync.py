@@ -37,6 +37,23 @@ Three execution methods mirror the paper's Table 1:
   messages bounce via a seeded-hash intermediate, each phase a ``direct``
   sync of a near-balanced relation.
 
+On top of these, ``auto`` planning recognises canonical patterns and
+lowers each onto the single native collective XLA offers for it (pMR's
+transport selection), instead of generic permutation rounds:
+
+* ``fused``         — total exchange           -> 1 ``lax.all_to_all``
+* ``fused_ag``      — all-gather               -> 1 ``lax.all_gather``
+* ``fused_rs``      — reduce-scatter (needs ``attrs.reduce_op``)
+                      -> 1 ``lax.psum_scatter`` (sum) or masked
+                      ``all_to_all`` + local combine (max/min)
+* ``fused_scatter`` — root scatter             -> 1 masked ``all_to_all``
+* ``fused_gather``  — gather to root           -> 1 masked ``all_gather``
+
+``attrs.reduce_op`` turns a superstep into an *accumulating-put*
+superstep: overlapping destination writes combine elementwise
+(sum/max/min) instead of CRCW-arbitrating, which is what makes the
+reduce-scatter relation expressible as a message table at all.
+
 Every sync appends a :class:`SuperstepCost` to the context ledger so model
 compliance can be audited against the compiled HLO; the executed ledger
 entry is by construction identical to the plan's prediction.
@@ -116,6 +133,10 @@ def _is_floating(dtype) -> bool:
     return np.issubdtype(np.dtype(dtype), np.floating)
 
 
+#: elementwise combine functions for accumulating-put supersteps
+_REDUCE_FNS = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
+
+
 # ==========================================================================
 # Stage 1: PLAN — pure Python, no JAX ops
 # ==========================================================================
@@ -144,15 +165,24 @@ class SuperstepPlan:
     ``(src, dst, slot shape/dtype/kind pattern, offsets, size)`` with slot
     ids renamed by first occurrence."""
 
-    method: str        # noop | seq | direct | bruck | valiant | fused | fused_ag
+    #: noop | seq | direct | bruck | valiant | fused | fused_ag |
+    #: fused_rs | fused_scatter | fused_gather
+    method: str
     p: int
     n_msgs: int
     cost: SuperstepCost                                   # label == ""
     rounds: Tuple[RoundPlan, ...] = ()                    # direct
     seq_order: Tuple[int, ...] = ()                       # p == 1 memcpys
-    fused_w: int = 0                                      # fused / fused_ag
+    fused_w: int = 0                                      # all fused methods
     ag_src_off: Tuple[int, ...] = ()                      # fused_ag, per pid
     ag_exclude_self: bool = False
+    reduce_op: Optional[str] = None                       # accumulate mode
+    rs_dst_off: Tuple[int, ...] = ()                      # fused_rs, per dst
+    fused_root: int = -1                                  # scatter / gather
+    sc_dst_off: Tuple[int, ...] = ()                      # fused_scatter
+    sc_mask: Tuple[int, ...] = ()                         # fused_scatter
+    g_src_off: Tuple[int, ...] = ()                       # fused_gather
+    g_has_self: bool = False                              # fused_gather
     bruck_w: int = 0
     bruck_steps: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()  # (step, rows)
     valiant_order: Tuple[int, ...] = ()                   # sorted msg indices
@@ -271,6 +301,103 @@ def _detect_allgather(msgs: Sequence[Msg], p: int
     return (m0.src_slot, m0.dst_slot, w, src_off)
 
 
+def _detect_reduce_scatter(msgs: Sequence[Msg], p: int,
+                           attrs: SyncAttributes
+                           ) -> Optional[Tuple[Slot, Slot, int, np.ndarray]]:
+    """Detect the canonical reduce-scatter: every (s, d) pair sends ``w``
+    elements with src_off = d*w to a per-destination constant offset,
+    all p contributions combining under ``attrs.reduce_op`` -> one
+    ``lax.psum_scatter`` (sum) or ``all_to_all`` + local combine."""
+    if attrs.reduce_op is None or attrs.compress is not None:
+        return None
+    if p == 1 or len(msgs) != p * p:
+        return None
+    m0 = msgs[0]
+    w = m0.size
+    if w == 0:
+        return None
+    seen = set()
+    dst_off = np.full(p, -1, np.int64)
+    for m in msgs:
+        if (m.src_slot.sid != m0.src_slot.sid
+                or m.dst_slot.sid != m0.dst_slot.sid
+                or m.size != w or m.src_off != m.dst * w
+                or (m.src, m.dst) in seen):
+            return None
+        if dst_off[m.dst] == -1:
+            dst_off[m.dst] = m.dst_off
+        elif dst_off[m.dst] != m.dst_off:
+            return None
+        seen.add((m.src, m.dst))
+    if m0.src_slot.size < p * w:
+        return None
+    return (m0.src_slot, m0.dst_slot, w, dst_off)
+
+
+def _detect_scatter(msgs: Sequence[Msg], p: int
+                    ) -> Optional[Tuple[Slot, Slot, int, int,
+                                        np.ndarray, np.ndarray]]:
+    """Detect the canonical root scatter: one source sends chunk d
+    (src_off = d*w) to every process d at a per-destination offset ->
+    one masked ``all_to_all`` (1 round instead of p-1 ppermutes; equal
+    h, so the fused schedule strictly dominates on latency)."""
+    if p == 1 or len(msgs) not in (p, p - 1):
+        return None
+    m0 = msgs[0]
+    root = m0.src
+    w = m0.size
+    if w == 0:
+        return None
+    seen_dst = set()
+    dst_off = np.zeros(p, np.int64)
+    mask = np.zeros(p, np.int8)
+    for m in msgs:
+        if (m.src != root or m.src_slot.sid != m0.src_slot.sid
+                or m.dst_slot.sid != m0.dst_slot.sid
+                or m.size != w or m.src_off != m.dst * w
+                or m.dst in seen_dst):
+            return None
+        seen_dst.add(m.dst)
+        dst_off[m.dst] = m.dst_off
+        mask[m.dst] = 1
+    if len(msgs) == p - 1 and root in seen_dst:
+        return None   # the p-1 variant is exactly "everyone but root"
+    if m0.src_slot.size < p * w:
+        return None
+    return (m0.src_slot, m0.dst_slot, w, root, dst_off, mask)
+
+
+def _detect_gather(msgs: Sequence[Msg], p: int
+                   ) -> Optional[Tuple[Slot, Slot, int, int,
+                                       np.ndarray, bool]]:
+    """Detect the canonical gather to root: every process sends ``w``
+    elements (from a per-source constant offset) to one root at
+    dst_off = src*w -> one masked ``lax.all_gather``."""
+    if p == 1 or len(msgs) not in (p, p - 1):
+        return None
+    m0 = msgs[0]
+    root = m0.dst
+    w = m0.size
+    if w == 0:
+        return None
+    seen_src = set()
+    src_off = np.zeros(p, np.int64)
+    for m in msgs:
+        if (m.dst != root or m.src_slot.sid != m0.src_slot.sid
+                or m.dst_slot.sid != m0.dst_slot.sid
+                or m.size != w or m.dst_off != m.src * w
+                or m.src in seen_src):
+            return None
+        seen_src.add(m.src)
+        src_off[m.src] = m.src_off
+    has_self = root in seen_src
+    if len(msgs) == p - 1 and has_self:
+        return None   # the p-1 variant is exactly "everyone but root"
+    if m0.dst_slot.size < p * w or m0.src_slot.size < w:
+        return None
+    return (m0.src_slot, m0.dst_slot, w, root, src_off, has_self)
+
+
 def plan_cost(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
               label: str, method: str, rounds: int,
               wire_sent: Dict[int, int], wire_recv: Dict[int, int]) -> SuperstepCost:
@@ -313,8 +440,11 @@ def _plan_direct(msgs: Sequence[Msg], attrs: SyncAttributes,
     for i, m in enumerate(msgs):
         groups.setdefault((m.src_slot.sid, m.dst_slot.sid), []).append(i)
     rounds: List[RoundPlan] = []
+    # combining writes are order-free (sum/max/min commute), so reduce
+    # supersteps pack rounds as tightly as a no-conflict assertion
+    relaxed = attrs.no_conflict or attrs.reduce_op is not None
     for idxs in groups.values():
-        for round_idxs in _colour_rounds(idxs, msgs, attrs.no_conflict):
+        for round_idxs in _colour_rounds(idxs, msgs, relaxed):
             size = max((msgs[i].size for i in round_idxs), default=0)
             static = msgs[round_idxs[0]].src_off \
                 if round_idxs and _is_uniform(round_idxs, msgs) else None
@@ -413,6 +543,15 @@ def plan_sync(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
     msgs = list(msgs)
     for m in msgs:
         m.validate(p)
+    if attrs.reduce_op is not None:
+        if attrs.reduce_op not in _REDUCE_FNS:
+            raise LPFFatalError(
+                f"unknown reduce_op {attrs.reduce_op!r}; expected one of "
+                f"{sorted(_REDUCE_FNS)}")
+        if attrs.method in ("bruck", "valiant"):
+            raise LPFFatalError(
+                "reduce_op supersteps support method 'auto' or 'direct' "
+                f"only, not {attrs.method!r}")
     wire_sent: Dict[int, int] = {}
     wire_recv: Dict[int, int] = {}
 
@@ -429,15 +568,27 @@ def plan_sync(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
                                             msgs[i].dst_off)))
         return SuperstepPlan(
             method="seq", p=p, n_msgs=len(msgs), seq_order=order,
+            reduce_op=attrs.reduce_op,
             cost=plan_cost(msgs, p, attrs, "", "noop", 0,
                            wire_sent, wire_recv))
 
     method = attrs.method
+    det_rs = det_te = det_ag = det_sc = det_ga = None
     if method == "auto":
-        if _detect_total_exchange(msgs, p) is not None:
+        if (det_rs := _detect_reduce_scatter(msgs, p, attrs)) is not None:
+            method = "fused_rs"
+        elif (det_te := _detect_total_exchange(msgs, p)) is not None:
             method = "fused"
-        elif _detect_allgather(msgs, p) is not None:
+        elif (det_ag := _detect_allgather(msgs, p)) is not None:
             method = "fused_ag"
+        elif attrs.compress is None and \
+                (det_sc := _detect_scatter(msgs, p)) is not None:
+            method = "fused_scatter"
+        elif attrs.compress is None and \
+                (det_ga := _detect_gather(msgs, p)) is not None:
+            method = "fused_gather"
+        elif attrs.reduce_op is not None:
+            method = "direct"    # bruck cannot combine conflicting writes
         else:
             # latency heuristic: many small messages per process -> bruck
             per_src: Dict[int, int] = {}
@@ -455,8 +606,50 @@ def plan_sync(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
             else:
                 method = "direct"
 
+    if method == "fused_rs":
+        src_slot, dst_slot, w, rs_off = det_rs
+        itemsize = _itemsize(src_slot.dtype)
+        for pid in range(p):
+            wire_sent[pid] = (p - 1) * w * itemsize
+            wire_recv[pid] = (p - 1) * w * itemsize
+        return SuperstepPlan(
+            method="fused_rs", p=p, n_msgs=len(msgs), fused_w=w,
+            reduce_op=attrs.reduce_op,
+            rs_dst_off=tuple(int(o) for o in rs_off),
+            cost=plan_cost(msgs, p, attrs, "", "fused_rs", 1,
+                           wire_sent, wire_recv))
+
+    if method == "fused_scatter":
+        src_slot, dst_slot, w, root, sc_off, sc_mask = det_sc
+        itemsize = _itemsize(src_slot.dtype)
+        # the all_to_all schedule moves (p-1)*w per process — same h as
+        # the root's send volume, for a single l instead of p-1
+        for pid in range(p):
+            wire_sent[pid] = (p - 1) * w * itemsize
+            wire_recv[pid] = (p - 1) * w * itemsize
+        return SuperstepPlan(
+            method="fused_scatter", p=p, n_msgs=len(msgs), fused_w=w,
+            fused_root=root, reduce_op=attrs.reduce_op,
+            sc_dst_off=tuple(int(o) for o in sc_off),
+            sc_mask=tuple(int(m_) for m_ in sc_mask),
+            cost=plan_cost(msgs, p, attrs, "", "fused_scatter", 1,
+                           wire_sent, wire_recv))
+
+    if method == "fused_gather":
+        src_slot, dst_slot, w, root, g_off, g_self = det_ga
+        itemsize = _itemsize(src_slot.dtype)
+        for pid in range(p):
+            wire_sent[pid] = (p - 1) * w * itemsize
+            wire_recv[pid] = (p - 1) * w * itemsize
+        return SuperstepPlan(
+            method="fused_gather", p=p, n_msgs=len(msgs), fused_w=w,
+            fused_root=root, reduce_op=attrs.reduce_op,
+            g_src_off=tuple(int(o) for o in g_off), g_has_self=g_self,
+            cost=plan_cost(msgs, p, attrs, "", "fused_gather", 1,
+                           wire_sent, wire_recv))
+
     if method == "fused_ag":
-        src_slot, dst_slot, w, src_off = _detect_allgather(msgs, p)
+        src_slot, dst_slot, w, src_off = det_ag
         compressed = attrs.compress is not None and _is_floating(
             src_slot.dtype)
         itemsize = 1 if compressed else _itemsize(src_slot.dtype)
@@ -471,7 +664,7 @@ def plan_sync(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
                            wire_sent, wire_recv))
 
     if method == "fused":
-        src_slot, dst_slot, w = _detect_total_exchange(msgs, p)
+        src_slot, dst_slot, w = det_te
         compressed = attrs.compress is not None and _is_floating(
             src_slot.dtype)
         itemsize = 1 if compressed else _itemsize(src_slot.dtype)
@@ -513,6 +706,7 @@ def plan_sync(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
     rounds_plan, rounds = _plan_direct(msgs, attrs, wire_sent, wire_recv)
     return SuperstepPlan(
         method="direct", p=p, n_msgs=len(msgs), rounds=rounds_plan,
+        reduce_op=attrs.reduce_op,
         cost=plan_cost(msgs, p, attrs, "", "direct", rounds,
                        wire_sent, wire_recv))
 
@@ -550,8 +744,8 @@ def plan_signature(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
                        else (scratch.size, str(np.dtype(scratch.dtype))))
     else:
         scratch_sig = None
-    return (p, attrs.method, attrs.no_conflict, attrs.compress,
-            scratch_sig, tuple(slots), table)
+    return (p, attrs.method, attrs.no_conflict, attrs.reduce_op,
+            attrs.compress, scratch_sig, tuple(slots), table)
 
 
 @dataclasses.dataclass
@@ -648,6 +842,34 @@ def _scatter_payload(val: jnp.ndarray, payload: jnp.ndarray,
         mode="fill", fill_value=0)), mode="drop")
 
 
+def _scatter_payload_acc(val: jnp.ndarray, written: jnp.ndarray,
+                         payload: jnp.ndarray, offs: np.ndarray,
+                         sizes: np.ndarray, mask: np.ndarray, myid,
+                         op) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Accumulating delivery: masked elements combine via ``op`` with
+    writes applied earlier in the same superstep (``written`` tracks
+    them); the first write to an element replaces its old value."""
+    size = payload.shape[0]
+    off = jnp.asarray(offs)[myid]
+    nrecv = jnp.asarray(sizes)[myid]
+    active = jnp.asarray(mask)[myid]
+    keep = (jnp.arange(size) < nrecv) & (active > 0)
+    if int(np.max(offs)) + size <= val.shape[0]:
+        cur = lax.dynamic_slice(val, (off,), (size,))
+        wr = lax.dynamic_slice(written, (off,), (size,))
+        new = jnp.where(keep, jnp.where(wr, op(cur, payload), payload), cur)
+        val = lax.dynamic_update_slice(val, new, (off,))
+        written = lax.dynamic_update_slice(written, wr | keep, (off,))
+        return val, written
+    idx = off + jnp.arange(size)
+    cur = val.at[idx].get(mode="fill", fill_value=0)
+    wr = written.at[idx].get(mode="fill", fill_value=False)
+    new = jnp.where(keep, jnp.where(wr, op(cur, payload), payload), cur)
+    val = val.at[idx].set(new, mode="drop")
+    written = written.at[idx].set(wr | keep, mode="drop")
+    return val, written
+
+
 def _maybe_compress(payload: jnp.ndarray, attrs: SyncAttributes):
     """int8 symmetric quantisation of a float payload (lower effective g)."""
     spec = attrs.compress
@@ -672,11 +894,16 @@ def _ppermute(x, axes: AxisNames, perm: List[Tuple[int, int]]):
 
 def _execute_direct(registry: SlotRegistry, msgs: Sequence[Msg],
                     rounds: Sequence[RoundPlan], p: int, axes: AxisNames,
-                    myid, attrs: SyncAttributes) -> None:
+                    myid, attrs: SyncAttributes,
+                    reduce_op: Optional[str] = None) -> None:
     """Lower planned ``direct`` rounds: one ``ppermute`` per round.
 
     All payloads are extracted from the *pre-sync* slot values before any
-    write is applied (LPF reads observe the pre-superstep state)."""
+    write is applied (LPF reads observe the pre-superstep state).  With
+    ``reduce_op``, deliveries that overlap earlier deliveries of this
+    superstep combine elementwise instead of overwriting."""
+    reduce_fn = _REDUCE_FNS[reduce_op] if reduce_op is not None else None
+    written: Dict[int, jnp.ndarray] = {}   # dst sid -> delivered mask
     # ---- extraction (reads observe pre-sync values) ----
     extracted: List[jnp.ndarray] = []
     scales: List[Optional[jnp.ndarray]] = []
@@ -724,8 +951,18 @@ def _execute_direct(registry: SlotRegistry, msgs: Sequence[Msg],
             offs[m.dst] = m.dst_off
             sizes[m.dst] = m.size
             mask[m.dst] = 1
-        registry.set_value(dst_slot, _scatter_payload(
-            registry.value(dst_slot), arrived, offs, sizes, mask, myid))
+        if reduce_fn is None:
+            registry.set_value(dst_slot, _scatter_payload(
+                registry.value(dst_slot), arrived, offs, sizes, mask, myid))
+        else:
+            wr = written.get(dst_slot.sid)
+            if wr is None:
+                wr = jnp.zeros(dst_slot.size, jnp.bool_)
+            val, wr = _scatter_payload_acc(
+                registry.value(dst_slot), wr, arrived, offs, sizes, mask,
+                myid, reduce_fn)
+            written[dst_slot.sid] = wr
+            registry.set_value(dst_slot, val)
 
 
 def _execute_bruck(registry: SlotRegistry, msgs: Sequence[Msg],
@@ -796,14 +1033,93 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
         return plan.cost_with_label(label)
 
     if plan.method == "seq":
-        for i in plan.seq_order:
+        reduce_fn = _REDUCE_FNS[plan.reduce_op] if plan.reduce_op else None
+        written: Dict[int, np.ndarray] = {}   # static masks: p == 1
+        # extract every payload before any write lands (LPF reads
+        # observe the pre-superstep state, exactly as _execute_direct)
+        pre = {m.src_slot.sid: registry.value(m.src_slot)
+               for i in plan.seq_order for m in (msgs[i],)}
+        chunks = [lax.dynamic_slice(pre[msgs[i].src_slot.sid],
+                                    (msgs[i].src_off,), (msgs[i].size,))
+                  for i in plan.seq_order]
+        for i, chunk in zip(plan.seq_order, chunks):
             m = msgs[i]
-            src = registry.value(m.src_slot)
             dst = registry.value(m.dst_slot)
-            chunk = lax.dynamic_slice(src, (m.src_off,), (m.size,))
+            if reduce_fn is not None:
+                wr = written.setdefault(m.dst_slot.sid,
+                                        np.zeros(m.dst_slot.size, bool))
+                seg = wr[m.dst_off:m.dst_off + m.size].copy()
+                if seg.any():
+                    cur = lax.dynamic_slice(dst, (m.dst_off,), (m.size,))
+                    chunk = jnp.where(jnp.asarray(seg),
+                                      reduce_fn(cur, chunk), chunk)
+                wr[m.dst_off:m.dst_off + m.size] = True
             registry.set_value(m.dst_slot,
                                lax.dynamic_update_slice(dst, chunk,
                                                         (m.dst_off,)))
+        return plan.cost_with_label(label)
+
+    if plan.method == "fused_rs":
+        w = plan.fused_w
+        m0 = msgs[0]
+        src_slot, dst_slot = m0.src_slot, m0.dst_slot
+        x = registry.value(src_slot)[: p * w].reshape(p, w)
+        axis = axes if len(axes) > 1 else axes[0]
+        if plan.reduce_op == "sum":
+            y = lax.psum_scatter(x, axis, scatter_dimension=0, tiled=False)
+        else:
+            # row s of the exchange holds process s's contribution to me
+            contrib = lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                     tiled=False)
+            y = (jnp.max if plan.reduce_op == "max" else jnp.min)(
+                contrib, axis=0)
+        off = jnp.asarray(np.asarray(plan.rs_dst_off, np.int32))[myid]
+        dst = registry.value(dst_slot)
+        registry.set_value(dst_slot, lax.dynamic_update_slice(
+            dst, y.astype(dst_slot.dtype), (off,)))
+        return plan.cost_with_label(label)
+
+    if plan.method == "fused_scatter":
+        w = plan.fused_w
+        m0 = msgs[0]
+        src_slot, dst_slot = m0.src_slot, m0.dst_slot
+        x = registry.value(src_slot)[: p * w].reshape(p, w)
+        axis = axes if len(axes) > 1 else axes[0]
+        # row r of the result is what process r sent me; only the root's
+        # row carries data — the rest is the masked schedule's padding
+        y = lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                           tiled=False)
+        chunk = y[plan.fused_root]
+        off = jnp.asarray(np.asarray(plan.sc_dst_off, np.int32))[myid]
+        active = jnp.asarray(np.asarray(plan.sc_mask, np.int8))[myid] > 0
+        dst = registry.value(dst_slot)
+        cur = lax.dynamic_slice(dst, (off,), (w,))
+        new = jnp.where(active, chunk.astype(dst_slot.dtype), cur)
+        registry.set_value(dst_slot,
+                           lax.dynamic_update_slice(dst, new, (off,)))
+        return plan.cost_with_label(label)
+
+    if plan.method == "fused_gather":
+        w = plan.fused_w
+        m0 = msgs[0]
+        src_slot, dst_slot = m0.src_slot, m0.dst_slot
+        src_off = np.asarray(plan.g_src_off, np.int32)
+        sval = registry.value(src_slot)
+        if (src_off == src_off[0]).all():
+            x = lax.dynamic_slice(sval, (int(src_off[0]),), (w,))
+        else:
+            x = _gather_payload(sval, src_off, w, myid, None)
+        axis = axes if len(axes) > 1 else axes[0]
+        y = lax.all_gather(x, axis, tiled=True)          # [p * w]
+        dst = registry.value(dst_slot)
+        if not plan.g_has_self:
+            # root keeps its own chunk: no root -> root message was staged
+            own = lax.dynamic_slice(dst, (plan.fused_root * w,), (w,))
+            y = lax.dynamic_update_slice(y, own, (plan.fused_root * w,))
+        is_root = myid == plan.fused_root
+        new = jnp.where(is_root, y.astype(dst_slot.dtype), dst[: p * w])
+        registry.set_value(dst_slot,
+                           lax.dynamic_update_slice(dst, new, (0,)))
         return plan.cost_with_label(label)
 
     if plan.method == "fused_ag":
@@ -874,7 +1190,8 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
         _execute_bruck(registry, msgs, plan, p, axes, myid)
         return plan.cost_with_label(label)
 
-    _execute_direct(registry, msgs, plan.rounds, p, axes, myid, attrs)
+    _execute_direct(registry, msgs, plan.rounds, p, axes, myid, attrs,
+                    reduce_op=plan.reduce_op)
     return plan.cost_with_label(label)
 
 

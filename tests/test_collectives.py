@@ -45,6 +45,58 @@ def test_allreduce_nondivisible_length(mesh8):
     np.testing.assert_allclose(out, 8.0)
 
 
+def test_allreduce_max_min_ops(mesh8):
+    """max/min allreduces take the fused_rs path (all_to_all + combine)
+    and must not leak the zero-initialised staging buffers into results
+    that are all-negative / all-positive."""
+    def spmd(ctx, s, p, _):
+        neg = bsp.allreduce(ctx, -(jnp.arange(11.0) + 1.0 + ctx.pid),
+                            op=jnp.maximum, label="mx")
+        pos = bsp.allreduce(ctx, jnp.arange(11.0) + 1.0 + ctx.pid,
+                            op=jnp.minimum, label="mn")
+        return neg, pos
+
+    neg, pos = lpf.exec_(mesh8, spmd, out_specs=(P("x"), P("x")))
+    neg = np.asarray(neg).reshape(8, 11)
+    pos = np.asarray(pos).reshape(8, 11)
+    np.testing.assert_allclose(neg, np.tile(-(np.arange(11.0) + 1.0),
+                                            (8, 1)))
+    np.testing.assert_allclose(pos, np.tile(np.arange(11.0) + 1.0,
+                                            (8, 1)))
+
+
+def test_allreduce_explicit_bruck_method_still_works(mesh8):
+    """An explicit bruck/valiant method request cannot combine
+    conflicting writes, so allreduce must route it through the exchange
+    algorithm instead of staging an accumulating-put superstep."""
+    def spmd(ctx, s, p, _):
+        return bsp.allreduce(ctx, jnp.ones(16),
+                             attrs=SyncAttributes(method="bruck"))
+
+    out = np.asarray(lpf.exec_(mesh8, spmd, out_specs=P("x"))).reshape(8, 16)
+    np.testing.assert_allclose(out, 8.0)
+
+
+def test_reduce_to_root_vs_allreduce_cost(mesh8):
+    """reduce must no longer silently run (and bill) an allreduce: both
+    cost 2 fused rounds, but reduce's result lands at root only."""
+    ledgers = {}
+
+    def spmd(ctx, s, p, _):
+        ledgers["ledger"] = ctx.ledger
+        x = jnp.arange(24.0) * (1.0 + ctx.pid)
+        return bsp.reduce(ctx, x, root=2)
+
+    out, ledger = lpf.exec_(mesh8, spmd, out_specs=P("x"),
+                            return_ledger=True)
+    out = np.asarray(out).reshape(8, 24)
+    want = np.arange(24.0) * sum(1.0 + i for i in range(8))
+    np.testing.assert_allclose(out[2], want)
+    assert (out[np.arange(8) != 2] == 0).all()
+    assert [r.method for r in ledger.records] == ["fused_rs",
+                                                  "fused_gather"]
+
+
 def test_compressed_allreduce_error_bounded(mesh8):
     def spmd(ctx, s, p, _):
         x = jnp.linspace(-1, 1, 64) * (1.0 + 0.01 * ctx.pid)
@@ -70,8 +122,11 @@ def test_cross_pod_grad_sync(mesh_pdm):
     np.testing.assert_allclose(np.asarray(out["b"]), grads["b"], rtol=1e-6)
 
 
-def test_pod_allreduce_ring(mesh_pdm):
-    """pod_allreduce inside a manual-over-pod region averages across pods."""
+@pytest.mark.parametrize("method,want_method,want_rounds",
+                         [("auto", "rs+ag", 2), ("ring", "ring", 1)])
+def test_pod_allreduce_methods(mesh_pdm, method, want_method, want_rounds):
+    """pod_allreduce inside a manual-over-pod region averages across
+    pods; ``auto`` takes the fused reduce-scatter + all-gather pair."""
     from repro.bsp.pod_sync import pod_allreduce
     from repro.core import CostLedger
 
@@ -80,7 +135,7 @@ def test_pod_allreduce_ring(mesh_pdm):
     def body(x):
         pid = jax.lax.axis_index("pod").astype(jnp.float32)
         local = {"g": x + pid * 10.0}
-        out = pod_allreduce(local, 2, "pod", ledger=ledger)
+        out = pod_allreduce(local, 2, "pod", ledger=ledger, method=method)
         return out["g"]
 
     fn = compat.shard_map(body, mesh=mesh_pdm, in_specs=P(),
@@ -88,7 +143,8 @@ def test_pod_allreduce_ring(mesh_pdm):
     with compat.set_mesh(mesh_pdm):
         out = jax.jit(fn)(jnp.ones(4))
     np.testing.assert_allclose(np.asarray(out), 6.0)   # mean(1, 11)
-    assert ledger.records and ledger.records[0].method.startswith("ring")
+    assert ledger.records and ledger.records[0].method == want_method
+    assert ledger.records[0].rounds == want_rounds
 
 
 def test_pod_allreduce_compressed(mesh_pdm):

@@ -313,6 +313,68 @@ def test_rehook_pristine_context(mesh8):
     np.testing.assert_allclose(out, [(i - 1) % 8 for i in range(8)])
 
 
+def test_on_hold_context_rejects_staging_and_sync():
+    """Active contexts are disjoint (paper S2.2): while a rehook
+    sub-program runs, the parent context must refuse staging and sync."""
+    from repro.core import LPFContext
+
+    ctx = LPFContext(())
+    ctx.resize_memory_register(2)
+    ctx.resize_message_queue(4)
+    a = ctx.register_global("a", jnp.arange(4.0))
+    b = ctx.register_global("b", jnp.zeros(4))
+    seen = []
+
+    def sub(sub_ctx, s, p, _):
+        for stage in (lambda: ctx.put(a, b, to=0, size=4),
+                      lambda: ctx.get(a, b, frm=0, size=4),
+                      lambda: ctx.put_msgs([(0, 0, a, 0, b, 0, 4)]),
+                      lambda: ctx.sync()):
+            with pytest.raises(LPFFatalError):
+                stage()
+            seen.append(1)
+        return jnp.zeros(1)
+
+    lpf.rehook(ctx, sub)
+    assert len(seen) == 4
+    # released after the sub-program: the parent context works again
+    ctx.put(a, b, to=0, size=4)
+    ctx.sync()
+    np.testing.assert_allclose(np.asarray(ctx.tensor(b)), np.arange(4.0))
+
+
+def test_valiant_scratch_resize_does_not_leak_slots():
+    """Re-provisioning the Valiant scratch must replace the old slot, not
+    leak a registration per resize_message_queue call."""
+    from repro.core import LPFContext
+
+    ctx = LPFContext(())
+    ctx.resize_message_queue(4, valiant_payload=32)
+    baseline = ctx.registry.n_active
+    for _ in range(5):
+        ctx.resize_message_queue(4, valiant_payload=64)
+    assert ctx.registry.n_active == baseline
+    assert ctx._scratch is not None and ctx._scratch.size == 64
+    # user slots registered alongside survive the re-provisioning
+    ctx.resize_memory_register(1)
+    slot = ctx.register_global("user", jnp.zeros(4))
+    ctx.resize_message_queue(4, valiant_payload=16)
+    assert ctx.registry.value(slot).shape == (4,)
+
+
+def test_pad_to_validation():
+    from repro.bsp import pad_to
+
+    x = jnp.arange(4.0)
+    np.testing.assert_allclose(np.asarray(pad_to(x, 6)),
+                               [0, 1, 2, 3, 0, 0])
+    assert pad_to(x, 4) is x
+    with pytest.raises(LPFFatalError):       # cannot shrink
+        pad_to(x, 3)
+    with pytest.raises(LPFFatalError):       # 1-D only
+        pad_to(jnp.zeros((2, 2)), 8)
+
+
 def test_sequential_root_context():
     """LPF_ROOT: p=1 context outside any mesh — puts are memcpys."""
     from repro.core import LPFContext
@@ -324,3 +386,21 @@ def test_sequential_root_context():
     ctx.put(a, b, to=0, size=4)
     ctx.sync()
     np.testing.assert_allclose(np.asarray(ctx.tensor(b)), np.arange(4.0))
+
+
+def test_sequential_reads_observe_pre_sync_values():
+    """Chained p=1 puts (a->b, b->c) in one superstep must deliver b's
+    PRE-superstep contents to c, matching the p>1 direct semantics."""
+    from repro.core import LPFContext
+    ctx = LPFContext(())
+    ctx.resize_memory_register(3)
+    ctx.resize_message_queue(4)
+    a = ctx.register_global("a", jnp.arange(1.0, 5.0))
+    b = ctx.register_global("b", jnp.full(4, 7.0))
+    c = ctx.register_global("c", jnp.zeros(4))
+    ctx.put(a, b, to=0, size=4)
+    ctx.put(b, c, to=0, size=4)
+    ctx.sync()
+    np.testing.assert_allclose(np.asarray(ctx.tensor(b)),
+                               np.arange(1.0, 5.0))
+    np.testing.assert_allclose(np.asarray(ctx.tensor(c)), 7.0)

@@ -1,0 +1,266 @@
+"""Reduction supersteps: fused_rs / fused_scatter / fused_gather.
+
+Two families of checks, mirroring ``tests/test_sync_plan.py``'s
+cache/compliance XLA test:
+
+* **ledger vs HLO** — the fused methods' ledger entries must describe
+  what the compiler actually scheduled: one native collective
+  (``reduce-scatter`` / ``all-to-all`` / ``all-gather``), no
+  ``collective-permute`` chains, and wire bytes within the collective's
+  operand bytes.
+* **bit-for-bit vs direct** — for integer dtypes a reduction superstep
+  must produce *exactly* the same result through the fused one-shot as
+  through the generic coloured-round ``direct`` method (integer sums,
+  maxes and mins are associative, so any schedule agrees exactly).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import bsp, core as lpf
+from repro.core import FUSED_METHODS, SyncAttributes, compat
+from repro.core.hlo_analysis import parse_collectives
+
+pytestmark = pytest.mark.slow
+
+
+def _compile_with_ledger(mesh, spmd, x, out_specs):
+    """jit-compile an LPF spmd fn; returns (compiled fn, trace ledger)."""
+    box = {}
+
+    def wrapped(a):
+        ctx = lpf.LPFContext(("x",))
+        box["ledger"] = ctx.ledger
+        return spmd(ctx, ctx.pid, ctx.p, a)
+
+    fn = jax.jit(compat.shard_map(wrapped, mesh=mesh, in_specs=(P(),),
+                                  out_specs=out_specs, check_vma=False))
+    compiled = fn.lower(x).compile()
+    return fn, compiled, box["ledger"]
+
+
+# ---------------------------------------------------------------------------
+# ledger vs HLO compliance
+# ---------------------------------------------------------------------------
+
+def test_allreduce_ledger_and_hlo_compliance(mesh8):
+    """allreduce = fused_rs + fused_ag: rounds <= 2, per-process wire
+    <= 2(n/p)(p-1)*itemsize, and the compiled HLO carries a real
+    reduce-scatter instead of collective-permute rounds."""
+    n, p = 1024, 8
+
+    def spmd(ctx, s, p_, xt):
+        return bsp.allreduce(ctx, xt)
+
+    fn, compiled, ledger = _compile_with_ledger(
+        mesh8, spmd, jnp.zeros(n, jnp.float32), P("x"))
+    stats = parse_collectives(compiled.as_text())
+    assert stats.count_by_kind.get("reduce-scatter", 0) >= 1
+    assert stats.count_by_kind.get("all-gather", 0) >= 1
+    assert stats.count_by_kind.get("collective-permute", 0) == 0
+
+    rs, ag = ledger.records
+    assert rs.method == "fused_rs" and ag.method == "fused_ag"
+    assert rs.is_fused and ag.is_fused
+    assert rs.rounds + ag.rounds == 2
+    c = n // p
+    assert rs.wire_bytes + ag.wire_bytes <= 2 * c * (p - 1) * 4
+    # HLO result-shape bytes of the collectives stay within the promise
+    assert 0 < stats.total_bytes <= ledger.total_wire_bytes * 1.25
+
+    out = np.asarray(fn(jnp.ones(n, jnp.float32))).reshape(p, n)
+    np.testing.assert_allclose(out, 8.0)
+
+
+def test_reduce_is_a_genuine_reduction_to_root(mesh8):
+    """The headline bugfix: ``reduce`` must run reduce-scatter + gather
+    (2 fused rounds), not a full allreduce, and its ledger must say so."""
+    n, p, root = 512, 8, 3
+
+    def spmd(ctx, s, p_, xt):
+        return bsp.reduce(ctx, xt + ctx.pid, root=root)
+
+    fn, compiled, ledger = _compile_with_ledger(
+        mesh8, spmd, jnp.zeros(n, jnp.float32), P("x"))
+    rs, gather = ledger.records
+    assert rs.method == "fused_rs"
+    assert gather.method == "fused_gather"
+    assert rs.rounds == 1 and gather.rounds == 1
+    c = n // p
+    assert rs.wire_bytes == (p - 1) * c * 4
+    assert gather.wire_bytes == (p - 1) * c * 4
+    stats = parse_collectives(compiled.as_text())
+    assert stats.count_by_kind.get("reduce-scatter", 0) >= 1
+    assert stats.count_by_kind.get("collective-permute", 0) == 0
+
+    out = np.asarray(fn(jnp.arange(n, dtype=jnp.float32))).reshape(p, n)
+    want = np.sum(np.stack([np.arange(n, dtype=np.float64) + i
+                            for i in range(p)]), axis=0)
+    np.testing.assert_allclose(out[root], want, rtol=1e-6)
+    # the result is defined at root only; everyone else holds zeros
+    assert (out[np.arange(p) != root] == 0.0).all()
+
+
+def test_scatter_gather_ledger_and_hlo(mesh8):
+    """fused_scatter / fused_gather: one collective each, no permute
+    chains, cost equal to the direct schedule's h with a single l."""
+    w, root_s, root_g = 4, 2, 5
+
+    def spmd(ctx, s, p, _):
+        ctx.resize_memory_register(3)
+        ctx.resize_message_queue(2 * p)
+        full = ctx.register_global(
+            "full", jnp.arange(p * w, dtype=jnp.float32) * (1.0 + ctx.pid))
+        mine = ctx.register_global("mine", jnp.zeros(w))
+        back = ctx.register_global("back", jnp.full(p * w, -1.0))
+        ctx.put_msgs([(root_s, d, full, d * w, mine, 0, w)
+                      for d in range(p)])
+        ctx.sync(label="scatter")
+        ctx.put_msgs([(s_, root_g, mine, 0, back, s_ * w, w)
+                      for s_ in range(p)])
+        ctx.sync(label="gather")
+        return ctx.tensor(mine), ctx.tensor(back)
+
+    fn, compiled, ledger = _compile_with_ledger(
+        mesh8, spmd, jnp.zeros(1), (P("x"), P("x")))
+    sc, ga = ledger.records
+    assert sc.method == "fused_scatter" and sc.rounds == 1
+    assert ga.method == "fused_gather" and ga.rounds == 1
+    assert {sc.method, ga.method} <= FUSED_METHODS
+    p = 8
+    assert sc.wire_bytes == sc.h_bytes == (p - 1) * w * 4
+    assert ga.wire_bytes == ga.h_bytes == (p - 1) * w * 4
+    stats = parse_collectives(compiled.as_text())
+    assert stats.count_by_kind.get("all-to-all", 0) >= 1
+    assert stats.count_by_kind.get("all-gather", 0) >= 1
+    assert stats.count_by_kind.get("collective-permute", 0) == 0
+
+    mine, back = fn(jnp.zeros(1))
+    mine = np.asarray(mine).reshape(p, w)
+    back = np.asarray(back).reshape(p, p * w)
+    want = np.stack([np.arange(p * w)[d * w:(d + 1) * w] * (1.0 + root_s)
+                     for d in range(p)])
+    np.testing.assert_allclose(mine, want)
+    np.testing.assert_allclose(back[root_g], want.reshape(-1))
+    assert (back[np.arange(p) != root_g] == -1.0).all()
+
+
+def test_broadcast_takes_two_fused_rounds(mesh8):
+    """broadcast = fused_scatter + fused_ag: 2 rounds instead of p+1."""
+    def spmd(ctx, s, p, _):
+        return bsp.broadcast(ctx, jnp.arange(64.0) + 100.0 * ctx.pid,
+                             root=6)
+
+    fn, compiled, ledger = _compile_with_ledger(
+        mesh8, spmd, jnp.zeros(1), P("x"))
+    scatter, ag = ledger.records
+    assert scatter.method == "fused_scatter" and scatter.rounds == 1
+    assert ag.method == "fused_ag" and ag.rounds == 1
+    out = np.asarray(fn(jnp.zeros(1))).reshape(8, 64)
+    np.testing.assert_allclose(out, np.tile(np.arange(64.0) + 600.0,
+                                            (8, 1)))
+
+
+def test_plan_cache_reuses_reduction_plans(mesh8):
+    """Repeated allreduces through fresh slots must hit the plan cache
+    (the fused_rs signature is slot-renamed like every other plan)."""
+    cache = lpf.global_plan_cache()
+    cache.clear()
+
+    def spmd(ctx, s, p, xt):
+        y = bsp.allreduce(ctx, xt, label="ar1")
+        return bsp.allreduce(ctx, y, label="ar2")
+
+    fn, compiled, ledger = _compile_with_ledger(
+        mesh8, spmd, jnp.zeros(64, jnp.float32), P("x"))
+    # 2 allreduces x 2 supersteps = 4 syncs over 2 distinct relations
+    assert cache.stats.misses == 2 and cache.stats.hits == 2
+    a, b, c, d = ledger.records
+    assert dataclasses.replace(a, label="") == dataclasses.replace(
+        c, label="")
+    assert dataclasses.replace(b, label="") == dataclasses.replace(
+        d, label="")
+
+
+# ---------------------------------------------------------------------------
+# property: fused reductions agree with `direct` bit-for-bit on ints
+# ---------------------------------------------------------------------------
+
+def _run_reduction(mesh8, vals, w, method, reduce_op, dst_init):
+    def spmd(ctx, s, p, _):
+        ctx.resize_memory_register(2)
+        ctx.resize_message_queue(p * p)
+        src = ctx.register_global(
+            "src", jnp.asarray(vals, jnp.int32) + 1000 * ctx.pid)
+        dst = ctx.register_global(
+            "dst", jnp.full(w, dst_init, jnp.int32))
+        ctx.put_msgs([(s_, d, src, d * w, dst, 0, w)
+                      for s_ in range(p) for d in range(p)])
+        ctx.sync(SyncAttributes(method=method, reduce_op=reduce_op))
+        return ctx.tensor(dst)
+
+    return np.asarray(lpf.exec_(mesh8, spmd, None,
+                                out_specs=P("x"))).reshape(8, w)
+
+
+@pytest.mark.parametrize("reduce_op", ["sum", "max", "min"])
+@pytest.mark.parametrize("seed", range(4))
+def test_fused_rs_matches_direct_bitwise_int(mesh8, reduce_op, seed):
+    """The fused one-shot and the coloured-round schedule must agree
+    exactly for integer payloads — including ignoring the destination's
+    pre-superstep contents (messages combine with each other only)."""
+    rng = np.random.default_rng(seed)
+    p, w = 8, int(rng.integers(1, 5))
+    vals = rng.integers(-1000, 1000, size=p * w)
+    # dst_init != identity detects any pre-existing-value leak
+    fused = _run_reduction(mesh8, vals, w, "auto", reduce_op, dst_init=77)
+    direct = _run_reduction(mesh8, vals, w, "direct", reduce_op,
+                            dst_init=77)
+    assert (fused == direct).all()
+    contrib = np.stack([vals.reshape(p, w) + 1000 * s for s in range(p)])
+    oracle = {"sum": contrib.sum(0), "max": contrib.max(0),
+              "min": contrib.min(0)}[reduce_op]
+    # every process d holds the combined chunk d
+    want = np.stack([oracle[d] for d in range(p)])
+    assert (fused == want).all()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_generic_accumulating_superstep_matches_oracle(mesh8, seed):
+    """Non-canonical conflicting tables (no fused path) still combine
+    correctly through the direct accumulate schedule."""
+    rng = np.random.default_rng(100 + seed)
+    p, size = 8, 6
+    # random many-to-few table with overlapping destination windows
+    table = [(int(rng.integers(p)), int(rng.integers(3)),
+              int(rng.integers(3)), int(rng.integers(1, 4)))
+             for _ in range(int(rng.integers(2, 10)))]
+
+    def spmd(ctx, s, p_, _):
+        ctx.resize_memory_register(2)
+        ctx.resize_message_queue(len(table))
+        src = ctx.register_global(
+            "src", jnp.arange(size, dtype=jnp.int32) + 10 * ctx.pid)
+        dst = ctx.register_global("dst", jnp.full(size, 5, jnp.int32))
+        ctx.put_msgs([(s_, d, src, so, dst, so, sz)
+                      for (s_, d, so, sz) in table])
+        ctx.sync(SyncAttributes(reduce_op="sum"))
+        return ctx.tensor(dst)
+
+    out = np.asarray(lpf.exec_(mesh8, spmd, None,
+                               out_specs=P("x"))).reshape(8, size)
+    # oracle: first write replaces, later overlapping writes add
+    want = np.tile(np.full(size, 5, np.int64), (8, 1))
+    written = np.zeros((8, size), bool)
+    for (s_, d, so, sz) in table:
+        chunk = np.arange(size, dtype=np.int64)[so:so + sz] + 10 * s_
+        seg = slice(so, so + sz)
+        was = written[d, seg]
+        want[d, seg] = np.where(was, want[d, seg] + chunk, chunk)
+        written[d, seg] = True
+    assert (out == want).all()

@@ -263,6 +263,109 @@ def test_allgather_classified_fused_ag():
     assert plan.cost.rounds == 1
 
 
+def test_reduce_scatter_classified_fused_rs():
+    p, w = 4, 3
+    a = make_slot(1, p * w, "int32")
+    b = make_slot(2, w, "int32")
+    msgs = [Msg(s, d, a, d * w, b, 0, w)
+            for s in range(p) for d in range(p)]
+    plan = plan_sync(msgs, p, SyncAttributes(reduce_op="sum"))
+    assert plan.method == "fused_rs" and plan.fused_w == w
+    assert plan.reduce_op == "sum"
+    assert plan.rs_dst_off == (0,) * p
+    assert plan.cost.rounds == 1
+    # one reduce-scatter: (p-1) chunks of w int32 on the wire per process
+    assert plan.cost.wire_bytes == (p - 1) * w * 4
+    assert plan.cost.wire_bytes == plan.cost.h_bytes
+    # without reduce_op the same table is a conflicting-write CRCW
+    # superstep and must NOT take the fused path
+    crcw = plan_sync(msgs, p, LPF_SYNC_DEFAULT)
+    assert crcw.method == "direct"
+    # max/min reductions fuse too (all_to_all + local combine lowering)
+    assert plan_sync(msgs, p, SyncAttributes(reduce_op="max")).method == \
+        "fused_rs"
+
+
+def test_scatter_classified_fused_scatter():
+    p, w = 4, 3
+    a = make_slot(1, p * w)
+    b = make_slot(2, p * w)
+    root = 1
+    # canonical scatter incl. self-message, per-destination offsets d*w
+    msgs = [Msg(root, d, a, d * w, b, d * w, w) for d in range(p)]
+    plan = plan_sync(msgs, p, LPF_SYNC_DEFAULT)
+    assert plan.method == "fused_scatter" and plan.fused_root == root
+    assert plan.sc_dst_off == tuple(d * w for d in range(p))
+    assert plan.sc_mask == (1,) * p
+    assert plan.cost.rounds == 1
+    # equal h to the direct schedule (root sends (p-1)w), one l instead
+    # of p-1 — the fused schedule strictly dominates
+    assert plan.cost.wire_bytes == plan.cost.h_bytes == (p - 1) * w * 4
+    direct = plan_sync(msgs, p, SyncAttributes(method="direct"))
+    assert direct.cost.rounds == p - 1
+
+
+def test_gather_classified_fused_gather():
+    p, w = 4, 2
+    a = make_slot(1, w)
+    b = make_slot(2, p * w)
+    root = 2
+    msgs = [Msg(s, root, a, 0, b, s * w, w) for s in range(p)]
+    plan = plan_sync(msgs, p, LPF_SYNC_DEFAULT)
+    assert plan.method == "fused_gather" and plan.fused_root == root
+    assert plan.g_has_self and plan.g_src_off == (0,) * p
+    assert plan.cost.rounds == 1
+    # p-1 variant: everyone but root
+    sub = [m for m in msgs if m.src != root]
+    plan2 = plan_sync(sub, p, LPF_SYNC_DEFAULT)
+    assert plan2.method == "fused_gather" and not plan2.g_has_self
+
+
+def test_reduce_op_relaxes_round_packing():
+    """Combining writes commute, so conflicting messages need no strict
+    round ordering — the schedule packs like a no_conflict assertion."""
+    a = make_slot(1, 8)
+    b = make_slot(2, 8)
+    # three messages from distinct sources conflicting at dst 1
+    msgs = [Msg(s, 1, a, 0, b, 0, 4) for s in (0, 2, 3)]
+    crcw = plan_sync(msgs, 4, SyncAttributes(method="direct"))
+    acc = plan_sync(msgs, 4, SyncAttributes(method="direct",
+                                            reduce_op="sum"))
+    # both serialise on the shared receiver, but the accumulate plan is
+    # free to do so without arbitration-order constraints
+    assert acc.cost.rounds <= crcw.cost.rounds
+    assert acc.reduce_op == "sum"
+
+
+def test_reduce_op_validation():
+    a = make_slot(1, 8)
+    b = make_slot(2, 8)
+    msgs = [Msg(0, 1, a, 0, b, 0, 4)]
+    with pytest.raises(LPFFatalError):
+        plan_sync(msgs, 4, SyncAttributes(reduce_op="prod"))
+    with pytest.raises(LPFFatalError):
+        plan_sync(msgs, 4, SyncAttributes(method="bruck", reduce_op="sum"))
+    with pytest.raises(LPFFatalError):
+        plan_sync(msgs, 4, SyncAttributes(method="valiant",
+                                          reduce_op="sum"))
+
+
+def test_cache_misses_on_reduce_op():
+    """reduce_op changes superstep semantics, so it must key the cache."""
+    p, w = 4, 2
+    a = make_slot(1, p * w)
+    b = make_slot(2, w)
+    msgs = [Msg(s, d, a, d * w, b, 0, w)
+            for s in range(p) for d in range(p)]
+    cache = PlanCache()
+    cache.get_or_plan(msgs, p, LPF_SYNC_DEFAULT)
+    cache.get_or_plan(msgs, p, SyncAttributes(reduce_op="sum"))
+    cache.get_or_plan(msgs, p, SyncAttributes(reduce_op="max"))
+    assert cache.stats.misses == 3 and cache.stats.hits == 0
+    assert plan_signature(msgs, p, LPF_SYNC_DEFAULT) != \
+        plan_signature(msgs, p, SyncAttributes(reduce_op="sum"))
+
+
 def test_bruck_round_count_and_validation():
     p = 8
     a = make_slot(1, p)

@@ -100,7 +100,10 @@ def test_lpf_pod_sync_mode(mesh_pdm):
     params, opt, metrics = ts.step_fn(params, opt, batch)
     assert np.isfinite(float(metrics["loss"]))
     assert ts.ledger.records, "LPF mode must record superstep costs"
-    assert ts.ledger.records[0].method.startswith("ring")
+    # uncompressed gradients default to the fused reduce-scatter +
+    # all-gather pair; ring (lax.psum) remains reachable explicitly
+    assert ts.ledger.records[0].method == "rs+ag"
+    assert ts.ledger.records[0].rounds == 2
 
 
 def test_local_sgd_stale_sync(mesh_pdm):
