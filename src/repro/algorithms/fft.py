@@ -107,41 +107,46 @@ def bsp_fft_spmd(ctx: LPFContext, x_local: jnp.ndarray, n: int, *,
     phase = (s.astype(real_dt) * k2 / n) * real_dt.type(sign * 2.0 * np.pi)
     Z = X * jax.lax.complex(jnp.cos(phase), jnp.sin(phase)).astype(ctype)
 
-    # (2) the single redistribution: block d of my k2-range to process d
-    w = npp // p  # n / p^2 elements per (src, dst) pair
-    ctx.resize_memory_register(ctx.registry.n_active + 2)
-    ctx.resize_message_queue(p * p)
-    src = ctx.register_global("fft.src", Z)
-    dst = ctx.register_global("fft.buf", jnp.zeros(p * w, ctype))
-    ctx.put_msgs([(s_, d, src, d * w, dst, s_ * w, w)
-                  for s_ in range(p) for d in range(p)])
-    ctx.sync(attrs, label="fft.redistribute")
-    Zk = ctx.tensor(dst).reshape(p, w)      # [s, k2_local]
-    ctx.deregister(src)
+    # (2)-(4) run recorded: the twiddle matmul reads the redistribute
+    # output, so each superstep flushes (and replays from the program
+    # cache) individually — batching across the pair needs the
+    # dataflow-precise flush on the ROADMAP.
+    with ctx.program("bsp_fft"):
+        # (2) the single redistribution: block d of my k2-range to process d
+        w = npp // p  # n / p^2 elements per (src, dst) pair
+        ctx.resize_memory_register(ctx.registry.n_active + 2)
+        ctx.resize_message_queue(p * p)
+        src = ctx.register_global("fft.src", Z)
+        dst = ctx.register_global("fft.buf", jnp.zeros(p * w, ctype))
+        ctx.put_msgs([(s_, d, src, d * w, dst, s_ * w, w)
+                      for s_ in range(p) for d in range(p)])
+        ctx.sync(attrs, label="fft.redistribute")
+        Zk = ctx.tensor(dst).reshape(p, w)      # [s, k2_local]
+        ctx.deregister(src)
 
-    # (3) p-point DFTs across s as a dense twiddle matmul (MXU-friendly)
-    k1 = np.arange(p)
-    Wp = np.exp(sign * 2j * np.pi * np.outer(k1, k1) / p).astype(ctype)
-    Y = jnp.einsum("ts,sk->tk", jnp.asarray(Wp), Zk)   # [k1, k2_local]
+        # (3) p-point DFTs across s as a dense twiddle matmul (MXU-friendly)
+        k1 = np.arange(p)
+        Wp = np.exp(sign * 2j * np.pi * np.outer(k1, k1) / p).astype(ctype)
+        Y = jnp.einsum("ts,sk->tk", jnp.asarray(Wp), Zk)   # [k1, k2_local]
 
-    if not ordered:
+        if not ordered:
+            ctx.deregister(dst)
+            out = Y.reshape(-1)
+            return out / n if inverse else out
+
+        # (4) ordering pass: row k1 belongs to process k1 (block distribution)
+        ctx.resize_memory_register(ctx.registry.n_active + 2)
+        ctx.resize_message_queue(p * p)
+        osrc = ctx.register_global("fft.osrc", Y.reshape(-1))
+        odst = ctx.register_global("fft.odst", jnp.zeros(npp, ctype))
+        # my row k1=d (length w) goes to process d at offset (my pid)*w
+        ctx.put_msgs([(s_, d, osrc, d * w, odst, s_ * w, w)
+                      for s_ in range(p) for d in range(p)])
+        ctx.sync(attrs, label="fft.reorder")
+        yl = ctx.tensor(odst)
         ctx.deregister(dst)
-        out = Y.reshape(-1)
-        return out / n if inverse else out
-
-    # (4) ordering pass: row k1 belongs to process k1 (block distribution)
-    ctx.resize_memory_register(ctx.registry.n_active + 2)
-    ctx.resize_message_queue(p * p)
-    osrc = ctx.register_global("fft.osrc", Y.reshape(-1))
-    odst = ctx.register_global("fft.odst", jnp.zeros(npp, ctype))
-    # my row k1=d (length w) goes to process d at offset (my pid)*w
-    ctx.put_msgs([(s_, d, osrc, d * w, odst, s_ * w, w)
-                  for s_ in range(p) for d in range(p)])
-    ctx.sync(attrs, label="fft.reorder")
-    yl = ctx.tensor(odst)
-    ctx.deregister(dst)
-    ctx.deregister(osrc)
-    ctx.deregister(odst)
+        ctx.deregister(osrc)
+        ctx.deregister(odst)
     return yl / n if inverse else yl
 
 

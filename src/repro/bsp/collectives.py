@@ -160,21 +160,22 @@ def broadcast(ctx: LPFContext, x: jnp.ndarray, root: int = 0, *,
     n = int(x.shape[0])
     c = _chunk(n, p)
     xp = pad_to(x, c * p)
-    ctx.resize_memory_register(ctx.registry.n_active + 2)
-    ctx.resize_message_queue(p + p * p)
-    src = ctx.register_global(f"{label}.src", xp)
-    buf = ctx.register_global(f"{label}.buf", jnp.zeros(c * p, x.dtype))
-    # phase 1: root scatters chunk d to process d (p-1 messages from root)
-    ctx.put_msgs([(root, d, src, d * c, buf, d * c, c)
-                  for d in range(p)])
-    ctx.sync(attrs, label=f"{label}.scatter")
-    # phase 2: each process owns chunk `s` at offset s*c; allgather them
-    ctx.put_msgs([(s, d, buf, s * c, buf, s * c, c)
-                  for s in range(p) for d in range(p) if s != d])
-    ctx.sync(attrs, label=f"{label}.allgather")
-    out = ctx.tensor(buf)[:n]
-    ctx.deregister(src)
-    ctx.deregister(buf)
+    with ctx.program("broadcast"):
+        ctx.resize_memory_register(ctx.registry.n_active + 2)
+        ctx.resize_message_queue(p + p * p)
+        src = ctx.register_global(f"{label}.src", xp)
+        buf = ctx.register_global(f"{label}.buf", jnp.zeros(c * p, x.dtype))
+        # phase 1: root scatters chunk d to process d (p-1 msgs from root)
+        ctx.put_msgs([(root, d, src, d * c, buf, d * c, c)
+                      for d in range(p)])
+        ctx.sync(attrs, label=f"{label}.scatter")
+        # phase 2: each process owns chunk `s` at offset s*c; allgather
+        ctx.put_msgs([(s, d, buf, s * c, buf, s * c, c)
+                      for s in range(p) for d in range(p) if s != d])
+        ctx.sync(attrs, label=f"{label}.allgather")
+        out = ctx.tensor(buf)[:n]
+        ctx.deregister(src)
+        ctx.deregister(buf)
     return out
 
 
@@ -203,17 +204,18 @@ def _fused_reduction(ctx: LPFContext, x: jnp.ndarray, red_op: str,
     p = ctx.p
     n = int(x.shape[0])
     c = _chunk(n, p)
-    ctx.resize_memory_register(ctx.registry.n_active + 3)
-    ctx.resize_message_queue(p * p)
-    buf = _reduce_scatter_chunk(ctx, pad_to(x, c * p), c, red_op, attrs,
-                                label)
-    out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
-    ctx.put_msgs([(s, d, buf, 0, out, s * c, c)
-                  for s in range(p) for d in chunk_dsts(s, p)])
-    ctx.sync(attrs, label=f"{label}.{suffix}")
-    result = ctx.tensor(out)[:n]
-    ctx.deregister(buf)
-    ctx.deregister(out)
+    with ctx.program("fused_reduction"):
+        ctx.resize_memory_register(ctx.registry.n_active + 3)
+        ctx.resize_message_queue(p * p)
+        buf = _reduce_scatter_chunk(ctx, pad_to(x, c * p), c, red_op, attrs,
+                                    label)
+        out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
+        ctx.put_msgs([(s, d, buf, 0, out, s * c, c)
+                      for s in range(p) for d in chunk_dsts(s, p)])
+        ctx.sync(attrs, label=f"{label}.{suffix}")
+        result = ctx.tensor(out)[:n]
+        ctx.deregister(buf)
+        ctx.deregister(out)
     return result
 
 
@@ -273,32 +275,35 @@ def _allreduce_exchange(ctx: LPFContext, x: jnp.ndarray, *,
     n = int(x.shape[0])
     c = _chunk(n, p)
     xp = pad_to(x, c * p)
-    ctx.resize_memory_register(ctx.registry.n_active + 3)
-    ctx.resize_message_queue(p * p)
-    src = ctx.register_global(f"{label}.src", xp)
-    buf = ctx.register_global(f"{label}.buf", jnp.zeros(c * p, x.dtype))
-    out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
-    # superstep 1: total exchange — chunk d of every process lands on d
-    ctx.put_msgs([(s, d, src, d * c, buf, s * c, c)
-                  for s in range(p) for d in range(p)])
-    ctx.sync(attrs, label=f"{label}.scatter")
-    # local reduction of my chunk across all p contributions
-    contrib = ctx.tensor(buf).reshape(p, c)
-    if op is jnp.add:
-        red = jnp.sum(contrib, axis=0)
-    else:
-        red = contrib[0]
-        for i in range(1, p):
-            red = op(red, contrib[i])
-    ctx.write(out, jnp.concatenate([red, jnp.zeros(c * (p - 1), x.dtype)]))
-    # superstep 2: allgather reduced chunks (mine lives at offset 0)
-    ctx.put_msgs([(s, d, out, 0, out, s * c, c)
-                  for s in range(p) for d in range(p)])
-    ctx.sync(attrs, label=f"{label}.allgather")
-    result = ctx.tensor(out)[:n]
-    ctx.deregister(src)
-    ctx.deregister(buf)
-    ctx.deregister(out)
+    with ctx.program("allreduce_exchange"):
+        ctx.resize_memory_register(ctx.registry.n_active + 3)
+        ctx.resize_message_queue(p * p)
+        src = ctx.register_global(f"{label}.src", xp)
+        buf = ctx.register_global(f"{label}.buf", jnp.zeros(c * p, x.dtype))
+        out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
+        # superstep 1: total exchange — chunk d of every process lands on d
+        ctx.put_msgs([(s, d, src, d * c, buf, s * c, c)
+                      for s in range(p) for d in range(p)])
+        ctx.sync(attrs, label=f"{label}.scatter")
+        # local reduction of my chunk across all p contributions (the
+        # tensor read flushes the exchange — a compute barrier)
+        contrib = ctx.tensor(buf).reshape(p, c)
+        if op is jnp.add:
+            red = jnp.sum(contrib, axis=0)
+        else:
+            red = contrib[0]
+            for i in range(1, p):
+                red = op(red, contrib[i])
+        ctx.write(out, jnp.concatenate([red,
+                                        jnp.zeros(c * (p - 1), x.dtype)]))
+        # superstep 2: allgather reduced chunks (mine lives at offset 0)
+        ctx.put_msgs([(s, d, out, 0, out, s * c, c)
+                      for s in range(p) for d in range(p)])
+        ctx.sync(attrs, label=f"{label}.allgather")
+        result = ctx.tensor(out)[:n]
+        ctx.deregister(src)
+        ctx.deregister(buf)
+        ctx.deregister(out)
     return result
 
 

@@ -49,13 +49,22 @@ def lpf_allreduce(ctx: LPFContext, x: jnp.ndarray, *,
 
 def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
                          attrs: SyncAttributes = LPF_SYNC_DEFAULT,
-                         pod_axis: str = "pod", mean: bool = True):
+                         pod_axis: str = "pod", mean: bool = True,
+                         bucket_bytes: Optional[int] = None):
     """Returns ``sync(grads) -> grads`` averaging across ``pod_axis``.
 
     ``grad_specs`` is a pytree of PartitionSpecs congruent with ``grads``
     (the parameter sharding rules).  If the mesh has no pod axis (or one
     pod) the function is the identity — single-pod programs pay nothing.
-    """
+
+    With ``bucket_bytes`` the per-leaf gradients are packed into
+    ~``bucket_bytes``-sized buckets and each bucket is allreduced as its
+    own reduce-scatter + all-gather pair: L per-layer syncs become
+    ``ceil(sum(B)/bucket)`` fat supersteps.  Each bucket's pair is
+    recorded/replayed as its own LPF program (the collective's result
+    read is a flush barrier, so buckets cannot batch with each other
+    today — overlapping them is a ROADMAP item); repeated training
+    steps replay the cached per-bucket traces."""
     if pod_axis not in mesh.axis_names or mesh.shape[pod_axis] == 1:
         return lambda grads: grads
 
@@ -65,20 +74,32 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
 
         def body(*local_leaves):
             def spmd(ctx, s, p, leaves_in):
+                from .pod_sync import bucketize
                 shapes = [l.shape for l in leaves_in]
                 dtypes = [l.dtype for l in leaves_in]
-                flat = jnp.concatenate(
-                    [l.reshape(-1).astype(jnp.float32) for l in leaves_in])
-                n = flat.shape[0]
-                pad = (-n) % max(p, 1)
-                flat = collectives.pad_to(flat, n + pad)
-                red = lpf_allreduce(ctx, flat, attrs=attrs, mean=mean)[:n]
+                flats = [l.reshape(-1).astype(jnp.float32)
+                         for l in leaves_in]
+                buckets = bucketize([f.nbytes for f in flats],
+                                    bucket_bytes)
+                red_parts = [None] * len(flats)
+                # each allreduce records its own 2-superstep program
+                # (its result read is a flush barrier)
+                for idxs in buckets:
+                    flat = jnp.concatenate([flats[i] for i in idxs]) \
+                        if len(idxs) > 1 else flats[idxs[0]]
+                    n = flat.shape[0]
+                    pad = (-n) % max(p, 1)
+                    flat = collectives.pad_to(flat, n + pad)
+                    red = lpf_allreduce(ctx, flat, attrs=attrs,
+                                        mean=mean)[:n]
+                    off = 0
+                    for i in idxs:
+                        k = flats[i].shape[0]
+                        red_parts[i] = red[off:off + k]
+                        off += k
                 outs = []
-                off = 0
-                for shp, dt in zip(shapes, dtypes):
-                    k = int(np.prod(shp)) if shp else 1
-                    outs.append(red[off:off + k].reshape(shp).astype(dt))
-                    off += k
+                for part, shp, dt in zip(red_parts, shapes, dtypes):
+                    outs.append(part.reshape(shp).astype(dt))
                 return tuple(outs)
 
             return hook((pod_axis,), spmd, tuple(local_leaves))

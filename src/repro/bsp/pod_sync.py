@@ -23,6 +23,13 @@ instead.  Two methods:
   pair (``lax.psum_scatter`` + ``lax.all_gather``): the same fused
   transports the core planner picks for reduction supersteps, with the
   2n(q-1)/q wire split across two audited rounds.
+* ``bucketed`` — per-layer gradients are packed greedily into
+  ``bucket_bytes``-sized buckets, each synced as its own rs+ag pair:
+  L per-layer supersteps become ceil(sum(B)/bucket) fat ones — the BSP
+  model's "fewer, fatter h-relations" applied to the DCN hop (each
+  extra superstep pays another ``l``, and DCN ``l`` is the largest in
+  the machine table).  ``bucket_bytes=None`` degenerates to one bucket
+  (== ``rs+ag``).
 * ``ring``  — one ``lax.psum`` per leaf (XLA's own ring all-reduce);
   the compressed path always uses this, as int16 summands must be
   combined before dequantisation.
@@ -44,12 +51,32 @@ from jax import lax
 
 from repro.core import CostLedger, LPF_SYNC_DEFAULT, SuperstepCost, SyncAttributes
 
-__all__ = ["pod_allreduce"]
+__all__ = ["pod_allreduce", "bucketize"]
 
 
 def _leaf_bytes(tree) -> int:
     return sum(int(np.prod(l.shape)) * l.dtype.itemsize
                for l in jax.tree.leaves(tree))
+
+
+def bucketize(sizes_bytes, bucket_bytes: Optional[int]):
+    """Greedy contiguous packing of per-leaf byte sizes into buckets of
+    at most ``bucket_bytes`` (a leaf larger than the bucket gets its
+    own).  Returns a list of index lists.  ``bucket_bytes=None`` packs
+    everything into one bucket; ``bucket_bytes<=0`` is per-leaf."""
+    if not sizes_bytes:
+        return []
+    if bucket_bytes is None:
+        return [list(range(len(sizes_bytes)))]
+    buckets, cur, cur_b = [], [], 0
+    for i, b in enumerate(sizes_bytes):
+        if cur and cur_b + b > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_b = [], 0
+        cur.append(i)
+        cur_b += b
+    buckets.append(cur)
+    return buckets
 
 
 def _rs_ag_allreduce(tree, q: int, axis: str):
@@ -81,32 +108,50 @@ def pod_allreduce(tree, q: int, axis: str = "pod", *,
                   attrs: SyncAttributes = LPF_SYNC_DEFAULT,
                   mean: bool = True,
                   ledger: Optional[CostLedger] = None,
-                  method: str = "auto"):
+                  method: str = "auto",
+                  bucket_bytes: Optional[int] = None):
     """All-reduce a pytree over the ``axis`` of size ``q``; payloads
     optionally int16-quantised with a shared scale.
 
-    ``method``: ``auto`` (rs+ag when uncompressed, ring otherwise),
-    ``rs+ag`` (explicit reduce-scatter + all-gather), or ``ring``
-    (one ``lax.psum`` per leaf)."""
+    ``method``: ``auto`` (bucketed when ``bucket_bytes`` is set, rs+ag
+    when uncompressed, ring otherwise), ``rs+ag`` (explicit
+    reduce-scatter + all-gather of the whole flattened tree),
+    ``bucketed`` (one rs+ag pair per ~``bucket_bytes`` of gradients),
+    or ``ring`` (one ``lax.psum`` per leaf)."""
     if q <= 1:
         return tree
     compress = attrs.compress is not None
-    if method not in ("auto", "rs+ag", "ring"):
+    if method not in ("auto", "rs+ag", "ring", "bucketed"):
         raise ValueError(f"unknown pod_allreduce method {method!r}")
     if method == "auto":
-        method = "ring" if compress else "rs+ag"
-    if method == "rs+ag" and compress:
-        raise ValueError("rs+ag cannot combine quantised payloads; use "
-                         "method='ring' with compression")
+        method = "ring" if compress else \
+            ("bucketed" if bucket_bytes is not None else "rs+ag")
+    if method in ("rs+ag", "bucketed") and compress:
+        raise ValueError(f"{method} cannot combine quantised payloads; "
+                         "use method='ring' with compression")
 
-    if method == "rs+ag":
-        acc, m = _rs_ag_allreduce(tree, q, axis)
-        if ledger is not None:
-            wire = 2 * (q - 1) * m * 4          # f32 on the wire, per pod
-            ledger.add(SuperstepCost(
-                label=f"pod_allreduce[x{q}]", h_bytes=wire,
-                wire_bytes=wire, total_wire_bytes=wire * q, rounds=2,
-                n_msgs=2 * q * q, method="rs+ag"))
+    if method in ("rs+ag", "bucketed"):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            return tree
+        # wire payloads are f32 regardless of the stored dtype
+        sizes = [int(np.prod(l.shape)) * 4 if l.shape else 4
+                 for l in leaves]
+        buckets = bucketize(
+            sizes, bucket_bytes if method == "bucketed" else None)
+        acc_leaves = [None] * len(leaves)
+        for bi, idxs in enumerate(buckets):
+            acc, m = _rs_ag_allreduce([leaves[i] for i in idxs], q, axis)
+            for i, a in zip(idxs, acc):
+                acc_leaves[i] = a
+            if ledger is not None:
+                wire = 2 * (q - 1) * m * 4      # f32 on the wire, per pod
+                suffix = f".b{bi}" if method == "bucketed" else ""
+                ledger.add(SuperstepCost(
+                    label=f"pod_allreduce{suffix}[x{q}]", h_bytes=wire,
+                    wire_bytes=wire, total_wire_bytes=wire * q, rounds=2,
+                    n_msgs=2 * q * q, method=method))
+        acc = jax.tree_util.tree_unflatten(treedef, acc_leaves)
         if mean:
             acc = jax.tree.map(lambda a: a / q, acc)
         return jax.tree.map(lambda a, l: a.astype(l.dtype), acc, tree)

@@ -28,7 +28,11 @@ from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
 from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
                       LPFMachine, probe)
 from .memslot import Slot, SlotRegistry
-from .sync import (Msg, PlanCache, RoundPlan, SuperstepPlan,
+from .program import (OptimizedStep, ProgramCache, ProgramStep,
+                      SuperstepProgram, global_program_cache,
+                      optimize_program, program_signature,
+                      simulate_program)
+from .sync import (CacheStats, Msg, PlanCache, RoundPlan, SuperstepPlan,
                    execute_plan, global_plan_cache, plan_cost, plan_sync,
                    plan_signature)
 from . import compat
@@ -42,8 +46,11 @@ __all__ = [
     "HardwareModel", "LinkModel", "LPFMachine", "probe",
     "TPU_V5E", "TPU_V5P", "CPU_HOST",
     "Slot", "SlotRegistry", "Msg",
-    "PlanCache", "RoundPlan", "SuperstepPlan",
+    "PlanCache", "CacheStats", "RoundPlan", "SuperstepPlan",
     "plan_sync", "plan_signature", "plan_cost", "execute_plan",
     "global_plan_cache", "compat",
+    "ProgramStep", "OptimizedStep", "SuperstepProgram", "ProgramCache",
+    "program_signature", "optimize_program", "global_program_cache",
+    "simulate_program",
     "CollectiveStats", "RooflineTerms", "parse_collectives", "roofline_terms",
 ]

@@ -17,8 +17,9 @@ values are read back with ``value`` / ``tensor``.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,7 @@ from .cost import CostLedger, SuperstepCost
 from .errors import LPFCapacityError, LPFFatalError
 from .machine import LPFMachine, HardwareModel, TPU_V5E, probe as _probe
 from .memslot import Slot, SlotRegistry
+from .program import ProgramCache, ProgramStep, global_program_cache
 from .sync import Msg, PlanCache, execute_plan, global_plan_cache
 
 __all__ = ["LPFContext", "exec_", "hook", "rehook", "LPF_ROOT_AXES"]
@@ -57,6 +59,7 @@ class LPFContext:
     def __init__(self, axes: Sequence[str] = LPF_ROOT_AXES, *,
                  hardware: HardwareModel = TPU_V5E,
                  plan_cache: Optional[PlanCache] = None,
+                 program_cache: Optional[ProgramCache] = None,
                  _parent: Optional["LPFContext"] = None):
         self.axes: Tuple[str, ...] = tuple(axes)
         if self.axes:
@@ -72,6 +75,9 @@ class LPFContext:
         #: repeated h-relations plan once across contexts and traces.
         self.plan_cache = plan_cache if plan_cache is not None \
             else global_plan_cache()
+        #: memoised optimized traces for the record/replay program layer
+        self.program_cache = program_cache if program_cache is not None \
+            else global_program_cache()
         self.registry = SlotRegistry(capacity=0)
         self.ledger = CostLedger()
         self._queue: List[Msg] = []
@@ -79,6 +85,11 @@ class LPFContext:
         self._scratch: Optional[Slot] = None
         self._parent = _parent
         self._on_hold = False
+        self._rec_depth = 0
+        self._rec_labels: List[str] = []
+        self._rec_pending: List[ProgramStep] = []
+        self._rec_deferred_dereg: List[Slot] = []
+        self._gate_machine: Optional[LPFMachine] = None
 
     # ------------------------------------------------------------------
     # capacity management: lpf_resize_message_queue / _memory_register
@@ -92,6 +103,10 @@ class LPFContext:
         if n_msgs < 0:
             raise LPFFatalError("negative queue capacity")
         self._queue_capacity = n_msgs
+        if valiant_payload > 0 and self._rec_pending:
+            # re-provisioning replaces the scratch slot recorded supersteps
+            # may reference — execute them against the current one first
+            self._flush_program()
         if valiant_payload > 0:
             # re-provisioning replaces the previous scratch slot; keeping
             # the stale registration would leak register capacity on every
@@ -119,6 +134,11 @@ class LPFContext:
         return self.registry.register(name, value, "local", flatten)
 
     def deregister(self, slot: Slot) -> None:
+        if self._rec_depth and self._pending_refs(slot):
+            # a recorded superstep still moves data through this slot;
+            # deregistration takes effect when the trace flushes
+            self._rec_deferred_dereg.append(slot)
+            return
         self.registry.deregister(slot)
 
     # ------------------------------------------------------------------
@@ -193,12 +213,31 @@ class LPFContext:
     # the fence: lpf_sync
     # ------------------------------------------------------------------
     def sync(self, attrs: SyncAttributes = LPF_SYNC_DEFAULT,
-             label: str = "") -> SuperstepCost:
+             label: str = "") -> Optional[SuperstepCost]:
         """Plan (memoised), lower, and account one superstep; returns its
         ledger entry so callers can thread costs through without reading
-        the ledger back."""
+        the ledger back.
+
+        While a program is being recorded (:meth:`record` /
+        :meth:`program`) the superstep is *deferred*: its table is
+        snapshotted into the pending trace and executed at the next
+        flush (a local read/write of a touched slot, or
+        :meth:`end_record`), after whole-trace optimization — in that
+        case ``sync`` returns ``None`` and the ledger entries appear at
+        flush time."""
         self._require_active()
-        label = label or f"superstep[{self.ledger.supersteps}]"
+        if not label:
+            prefix = next((l for l in reversed(self._rec_labels) if l), "")
+            n = self.ledger.supersteps + len(self._rec_pending)
+            label = f"{prefix}.superstep[{n}]" if prefix \
+                else f"superstep[{n}]"
+        if self._rec_depth:
+            for m in self._queue:
+                m.validate(self.p)
+            self._rec_pending.append(
+                ProgramStep(tuple(self._queue), attrs, label))
+            self._queue = []
+            return None
         plan = self.plan_cache.get_or_plan(self._queue, self.p, attrs,
                                            self._scratch)
         cost = execute_plan(plan, self.registry, self._queue, self.p,
@@ -207,6 +246,87 @@ class LPFContext:
         self.ledger.add(cost)
         self._queue = []
         return cost
+
+    # ------------------------------------------------------------------
+    # program record/replay (see repro.core.program)
+    # ------------------------------------------------------------------
+    def record(self, label: str = "") -> None:
+        """Start (or nest into) program recording: subsequent ``sync``
+        calls defer into a trace that is optimized — coalesced,
+        dead-transfer-eliminated, cost-gated superstep batching — and
+        replayed through the program cache at flush time.  ``label``
+        prefixes the default ledger labels of unlabelled syncs recorded
+        at this level."""
+        self._require_active()
+        self._rec_depth += 1
+        self._rec_labels.append(label)
+
+    def end_record(self) -> None:
+        """Leave one level of recording; the outermost level flushes any
+        pending supersteps."""
+        if self._rec_depth == 0:
+            raise LPFFatalError("end_record without a matching record()")
+        self._rec_depth -= 1
+        self._rec_labels.pop()
+        if self._rec_depth == 0:
+            self._flush_program()
+
+    @contextlib.contextmanager
+    def program(self, label: str = ""):
+        """``with ctx.program(): ...`` — record the body's supersteps as
+        one :class:`repro.core.SuperstepProgram`; re-entrant (a recorded
+        collective inside a recorded training step extends the outer
+        trace)."""
+        self.record(label)
+        try:
+            yield self
+        finally:
+            self.end_record()
+
+    def _machine(self) -> LPFMachine:
+        """The (g, l) machine the optimizer's cost gate prices with:
+        the real per-axis probe, so a context spanning a DCN pod axis
+        gates with DCN latencies, not the first axis's link class."""
+        if self._gate_machine is None:
+            axis_sizes = {a: int(lax.psum(1, a)) for a in self.axes}
+            self._gate_machine = _probe(axis_sizes, self.hardware)
+        return self._gate_machine
+
+    def _pending_refs(self, slot: Slot, dst_only: bool = False) -> bool:
+        """Does any pending recorded superstep reference ``slot``?"""
+        for st in self._rec_pending:
+            for m in st.msgs:
+                if m.dst_slot.sid == slot.sid:
+                    return True
+                if not dst_only and m.src_slot.sid == slot.sid:
+                    return True
+        return False
+
+    def _flush_program(self) -> None:
+        """Optimize (or fetch the cached optimization of) the pending
+        trace and execute it; the ledger gains one entry per *optimized*
+        superstep, each exactly its plan's predicted cost."""
+        if not self._rec_pending:
+            return
+        steps, self._rec_pending = self._rec_pending, []
+        prog = self.program_cache.get_or_build(
+            steps, self.p, self._machine(), plan_cache=self.plan_cache,
+            scratch=self._scratch)
+        labels = [st.label for st in steps]
+        for msgs, attrs, label, plan in prog.materialize(steps, labels):
+            cost = execute_plan(plan, self.registry, msgs, self.p,
+                                self.axes, self.pid, attrs, label,
+                                scratch=self._scratch)
+            self.ledger.add(cost)
+        dereg, self._rec_deferred_dereg = self._rec_deferred_dereg, []
+        for slot in dereg:
+            self.registry.deregister(slot)
+
+    @property
+    def cache_stats(self) -> Dict[str, Any]:
+        """Hit/miss/eviction counters of both memo layers."""
+        return {"plan": self.plan_cache.stats,
+                "program": self.program_cache.stats}
 
     # ------------------------------------------------------------------
     # introspection: lpf_probe
@@ -223,13 +343,23 @@ class LPFContext:
     # local access (between supersteps)
     # ------------------------------------------------------------------
     def value(self, slot: Slot) -> jnp.ndarray:
+        # local compute is a barrier: reading a slot a recorded superstep
+        # writes flushes (and executes) the pending trace first
+        if self._rec_pending and self._pending_refs(slot, dst_only=True):
+            self._flush_program()
         return self.registry.value(slot)
 
     def tensor(self, slot: Slot) -> jnp.ndarray:
+        if self._rec_pending and self._pending_refs(slot, dst_only=True):
+            self._flush_program()
         return self.registry.tensor(slot)
 
     def write(self, slot: Slot, value) -> None:
         """Local compute step writing a slot (allowed between supersteps)."""
+        # recorded supersteps must observe the slot as it was when they
+        # were staged; overwriting a referenced slot flushes them first
+        if self._rec_pending and self._pending_refs(slot):
+            self._flush_program()
         value = jnp.asarray(value).reshape(-1).astype(slot.dtype)
         self.registry.set_value(slot, value)
 
@@ -250,16 +380,19 @@ class _Args:
 def hook(axes: Sequence[str], spmd: Callable, args: Any = None, *,
          hardware: HardwareModel = TPU_V5E,
          plan_cache: Optional[PlanCache] = None,
+         program_cache: Optional[ProgramCache] = None,
          parent: Optional[LPFContext] = None) -> Any:
     """``lpf_hook``: run an LPF SPMD function inside the *current* parallel
     environment (any traced program already under a mesh).  Returns the
     function's output.  O(1) setup — no processes are spawned.  The child
-    context inherits the parent's plan cache (or an explicit one) so
-    isolated caches stay isolated across hooked sub-programs."""
+    context inherits the parent's plan/program caches (or explicit ones)
+    so isolated caches stay isolated across hooked sub-programs."""
     if plan_cache is None and parent is not None:
         plan_cache = parent.plan_cache
+    if program_cache is None and parent is not None:
+        program_cache = parent.program_cache
     ctx = LPFContext(axes, hardware=hardware, plan_cache=plan_cache,
-                     _parent=parent)
+                     program_cache=program_cache, _parent=parent)
     return spmd(ctx, ctx.pid, ctx.p, args)
 
 

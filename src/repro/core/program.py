@@ -1,0 +1,563 @@
+"""SuperstepProgram — record/replay whole LPF programs.
+
+PR 1 made a single ``lpf_sync`` plan-once/execute-many.  The paper's
+immortal-algorithm argument, however, is about whole *programs*: the
+FFT's redistribute+reorder pair, PageRank's per-iteration h-relation, a
+training step's per-layer gradient syncs.  Re-entering the planner
+superstep by superstep ships many small h-relations where the BSP cost
+model says fewer, fatter ones are cheaper — every extra superstep pays
+another ``l``.  Following pMR's persistent communication objects, this
+module lifts the plan/cache/execute architecture one level up:
+
+* **record** — :meth:`repro.core.LPFContext.record` (or the
+  ``ctx.program()`` context manager) turns ``ctx.sync`` into a deferred
+  operation: each sync snapshots its ``(message table, attrs, label)``
+  into a pending trace instead of executing.  Local compute acts as a
+  barrier: reading a slot a pending superstep writes (or overwriting a
+  slot one references) flushes the trace first, so interleaved compute
+  keeps its sequential semantics.
+* **optimize** — :func:`optimize_program` rewrites one flushed trace:
+
+  1. *coalescing* — same-``(src, dst, slot-pair)`` messages contiguous
+     in both offsets merge into one fatter message (kept only when the
+     plan of the rewritten table is not predicted slower — round
+     padding can inflate wire bytes);
+  2. *dead-transfer elimination* — a message whose destination range is
+     completely overwritten by a later superstep before any read (and
+     before the trace ends) is dropped, gated the same way (removing a
+     message can demote a fused classification);
+  3. *superstep batching* — adjacent compute-independent supersteps
+     with equal attributes merge into one sync, cost-gated by the BSP
+     model: merge only when ``h_merged*g + l < sum(h_i*g + l)`` (with
+     ``h``/rounds taken from the planned schedules).
+
+* **replay** — optimized traces are cached in a :class:`ProgramCache`
+  keyed by the canonical program signature (slot ids renamed by first
+  occurrence *across the whole trace*), so repeated invocations —
+  a collective called per layer, an FFT called per batch — skip the
+  optimizer and the planner entirely and go straight to
+  :func:`repro.core.sync.execute_plan` with pre-planned supersteps.
+
+Every optimized superstep carries its :class:`SuperstepPlan`, so the
+ledger entry appended at execution is *by construction* the plan's
+predicted :class:`SuperstepCost` — optimization never breaks the
+compliance audit.
+
+:func:`simulate_program` is a pure-numpy reference interpreter of the
+p >= 2 superstep semantics (reads observe pre-superstep state; CRCW
+writes arbitrate in ascending ``(src, dst, dst_off)`` order per
+slot-pair group, groups in first-occurrence order; ``reduce_op``
+supersteps combine with first-write-replaces semantics).  The
+differential harness in ``tests/test_program_equivalence.py`` checks
+optimized traces against it bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .attrs import SyncAttributes
+from .errors import LPFFatalError
+from .machine import LPFMachine
+from .memslot import Slot
+from .sync import CacheStats, Msg, PlanCache, SuperstepPlan, plan_sync
+
+__all__ = [
+    "ProgramStep", "OptimizedStep", "SuperstepProgram", "ProgramCache",
+    "global_program_cache", "program_signature", "optimize_program",
+    "simulate_program",
+]
+
+#: canonical message: (src, dst, src_slot_idx, src_off, dst_slot_idx,
+#: dst_off, size, origin) with slot indices assigned by first occurrence
+#: across the whole trace
+CanonMsg = Tuple[int, int, int, int, int, int, int, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramStep:
+    """One recorded ``sync``: the staged table + its attributes."""
+
+    msgs: Tuple[Msg, ...]
+    attrs: SyncAttributes
+    label: str
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizedStep:
+    """One superstep of the optimized trace, in canonical (slot-renamed)
+    form plus its pre-computed plan.  ``merged_from`` names the recorded
+    step indices this superstep executes; ``unchanged`` marks a step no
+    rewrite touched, letting replay reuse the staged messages verbatim
+    instead of rebuilding them from the canonical table."""
+
+    table: Tuple[CanonMsg, ...]
+    attrs: SyncAttributes
+    label: str
+    plan: SuperstepPlan
+    merged_from: Tuple[int, ...]
+    unchanged: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepProgram:
+    """An optimized, replayable trace (the program-level IR)."""
+
+    p: int
+    steps: Tuple[OptimizedStep, ...]
+    n_recorded: int          # supersteps in the raw trace
+    n_coalesced: int         # messages removed by coalescing
+    n_eliminated: int        # messages removed as dead transfers
+    n_merged: int            # supersteps saved by batching
+
+    def materialize(self, slot_map_or_steps,
+                    labels: Optional[Sequence[str]] = None
+                    ) -> List[Tuple[List[Msg], SyncAttributes, str,
+                                    SuperstepPlan]]:
+        """Rebind the canonical tables to actual slots.  Pass either the
+        replaying trace's raw :class:`ProgramStep` list (untouched steps
+        reuse their staged messages verbatim; rewritten ones rebuild
+        from the canonical table via the trace's first-occurrence slot
+        map) or a pre-computed slot list.  ``labels`` are the replaying
+        trace's per-step labels, so a cached program replayed under new
+        labels ledgers under those (merged supersteps join theirs with
+        ``+``)."""
+        raw_steps: Optional[Sequence[ProgramStep]] = None
+        slot_map: Optional[List[Slot]] = None
+        if slot_map_or_steps and isinstance(slot_map_or_steps[0],
+                                            ProgramStep):
+            raw_steps = slot_map_or_steps
+        else:
+            slot_map = list(slot_map_or_steps)
+        out = []
+        for st in self.steps:
+            if raw_steps is not None and st.unchanged:
+                msgs = list(raw_steps[st.merged_from[0]].msgs)
+            else:
+                if slot_map is None:
+                    slot_map = trace_slot_map(raw_steps)
+                msgs = [Msg(src, dst, slot_map[si], so, slot_map[di], do,
+                            sz, origin=origin)
+                        for (src, dst, si, so, di, do, sz, origin)
+                        in st.table]
+            label = st.label if labels is None else \
+                "+".join(labels[i] for i in st.merged_from)
+            out.append((msgs, st.attrs, label, st.plan))
+        return out
+
+
+# ==========================================================================
+# canonicalization + signatures
+# ==========================================================================
+
+_DTYPE_STR: Dict[object, str] = {}
+
+
+def _dtype_str(dtype) -> str:
+    s = _DTYPE_STR.get(dtype)
+    if s is None:
+        s = _DTYPE_STR[dtype] = str(np.dtype(dtype))
+    return s
+
+
+def _slot_canon() -> Tuple[Dict[int, int], List[Tuple[int, str, str]],
+                           Callable[[Slot], int]]:
+    canon: Dict[int, int] = {}
+    descrs: List[Tuple[int, str, str]] = []
+
+    def key(slot: Slot) -> int:
+        idx = canon.get(slot.sid)
+        if idx is None:
+            idx = canon[slot.sid] = len(canon)
+            descrs.append((slot.size, _dtype_str(slot.dtype), slot.kind))
+        return idx
+
+    return canon, descrs, key
+
+
+def trace_slot_map(steps: Sequence[ProgramStep]) -> List[Slot]:
+    """Actual slots of a raw trace in first-occurrence order — the
+    inverse of the canonical renaming."""
+    seen: Dict[int, Slot] = {}
+    for st in steps:
+        for m in st.msgs:
+            for slot in (m.src_slot, m.dst_slot):
+                if slot.sid not in seen:
+                    seen[slot.sid] = slot
+    return list(seen.values())
+
+
+def _attrs_key(attrs: SyncAttributes) -> Hashable:
+    return (attrs.method, attrs.no_conflict, attrs.reduce_op,
+            attrs.compress, attrs.stale, attrs.valiant_seed)
+
+
+def program_signature(steps: Sequence[ProgramStep], p: int,
+                      scratch: Optional[Slot] = None) -> Hashable:
+    """Canonical key of a recorded trace: slot ids renamed by first
+    occurrence across *all* supersteps (a slot reused by two supersteps
+    must keep the same index — cross-superstep dataflow is part of the
+    program), plus per-step attributes and message order."""
+    _, descrs, key = _slot_canon()
+    step_sigs = []
+    for st in steps:
+        table = tuple((m.src, m.dst, key(m.src_slot), m.src_off,
+                       key(m.dst_slot), m.dst_off, m.size, m.origin)
+                      for m in st.msgs)
+        step_sigs.append((_attrs_key(st.attrs), table))
+    scratch_sig = None if scratch is None else \
+        (scratch.size, _dtype_str(scratch.dtype))
+    return (p, scratch_sig, tuple(descrs), tuple(step_sigs))
+
+
+# ==========================================================================
+# the optimizer
+# ==========================================================================
+
+def _ranges_overlap(a_off: int, a_size: int, b_off: int, b_size: int) -> bool:
+    return a_off < b_off + b_size and b_off < a_off + a_size
+
+
+def _writes_overlap(a: Msg, b: Msg) -> bool:
+    return (a.dst == b.dst and a.dst_slot.sid == b.dst_slot.sid
+            and _ranges_overlap(a.dst_off, a.size, b.dst_off, b.size))
+
+
+def _reads_write(reader: Msg, writer: Msg) -> bool:
+    """Does ``reader``'s source range observe ``writer``'s destination?"""
+    return (reader.src == writer.dst
+            and reader.src_slot.sid == writer.dst_slot.sid
+            and _ranges_overlap(reader.src_off, reader.size,
+                                writer.dst_off, writer.size))
+
+
+def _coalesce_step(msgs: List[Msg], attrs: SyncAttributes
+                   ) -> Tuple[List[Msg], int]:
+    """Merge same-(src, dst, slot-pair, origin) messages contiguous in
+    both offsets.  With CRCW semantics a merged write must not conflict
+    with any *other* message of the step (merging would move it in the
+    arbitration order); accumulating supersteps combine commutatively,
+    so contiguity alone suffices."""
+    if len(msgs) < 2:
+        return msgs, 0
+    groups: "collections.OrderedDict[Tuple, List[int]]" = \
+        collections.OrderedDict()
+    for i, m in enumerate(msgs):
+        groups.setdefault((m.src, m.dst, m.src_slot.sid, m.dst_slot.sid,
+                           m.origin), []).append(i)
+    merged: Dict[int, Msg] = {}      # first-piece index -> merged msg
+    dropped: set = set()
+    for idxs in groups.values():
+        if len(idxs) < 2:
+            continue
+        run = sorted(idxs, key=lambda i: msgs[i].src_off)
+        k = 0
+        while k < len(run):
+            first = run[k]
+            cur = msgs[first]
+            pieces = [first]
+            while k + 1 < len(run):
+                nxt = msgs[run[k + 1]]
+                if (cur.src_off + cur.size == nxt.src_off
+                        and cur.dst_off + cur.size == nxt.dst_off):
+                    cur = dataclasses.replace(cur, size=cur.size + nxt.size)
+                    pieces.append(run[k + 1])
+                    k += 1
+                else:
+                    break
+            k += 1
+            if len(pieces) == 1:
+                continue
+            if attrs.reduce_op is None:
+                others = [m for j, m in enumerate(msgs)
+                          if j not in pieces]
+                if any(_writes_overlap(cur, o) for o in others):
+                    continue   # merging would reorder a CRCW conflict
+            merged[min(pieces)] = cur
+            dropped.update(p_ for p_ in pieces if p_ != min(pieces))
+    if not merged:
+        return msgs, 0
+    out = [merged.get(i, m) for i, m in enumerate(msgs) if i not in dropped]
+    return out, len(dropped)
+
+
+def _group_order(msgs: Sequence[Msg]) -> List[Tuple[int, int]]:
+    """Slot-pair groups in first-occurrence order — the order the direct
+    executor applies them in (cross-group CRCW arbitration)."""
+    seen: List[Tuple[int, int]] = []
+    for m in msgs:
+        k = (m.src_slot.sid, m.dst_slot.sid)
+        if k not in seen:
+            seen.append(k)
+    return seen
+
+
+def _dead_msgs(tables: List[List[Msg]],
+               attrs_list: List[SyncAttributes], i: int) -> List[int]:
+    """Indices into ``tables[i]`` of messages whose destination range is
+    completely overwritten by a single later message before any read
+    (message sources are the only reads inside a trace; local compute
+    flushes the trace, so a flushed trace has no interior compute reads;
+    the trace end is a read of everything)."""
+    dead = []
+    for k, m in enumerate(tables[i]):
+        for j in range(i + 1, len(tables)):
+            if any(_reads_write(r, m) for r in tables[j]):
+                break               # observed before any full overwrite
+            if attrs_list[j].compress is not None:
+                continue            # lossy wire: not a clean overwrite
+            if any(w.dst == m.dst
+                   and w.dst_slot.sid == m.dst_slot.sid
+                   and w.dst_off <= m.dst_off
+                   and w.dst_off + w.size >= m.dst_off + m.size
+                   for w in tables[j]):
+                dead.append(k)
+                break
+    return dead
+
+
+def _independent(earlier: Sequence[Msg], later: Sequence[Msg],
+                 reduce_op: Optional[str]) -> bool:
+    """May ``later`` run in the same superstep as ``earlier``?  Requires
+    that no later message reads an earlier write (merged reads observe
+    pre-superstep state) and no destination ranges overlap across the
+    two (merged CRCW arbitration could elect a different winner; merged
+    accumulation would combine instead of overwrite).  For CRCW steps
+    the concatenation must also preserve ``later``'s internal group
+    order: a slot-pair group already present in ``earlier`` would hoist
+    to its position, reordering ``later``'s own cross-group conflicts."""
+    for m2 in later:
+        for m1 in earlier:
+            if _reads_write(m2, m1) or _writes_overlap(m1, m2):
+                return False
+    if reduce_op is None:
+        later_groups = set(_group_order(later))
+        merged_order = [g for g in _group_order(list(earlier) + list(later))
+                        if g in later_groups]
+        if merged_order != _group_order(later):
+            return False
+    return True
+
+
+def _cost_of(plan: SuperstepPlan, machine: LPFMachine) -> float:
+    return plan.cost.wire_bytes * machine.g + plan.cost.rounds * machine.l
+
+
+def optimize_program(steps: Sequence[ProgramStep], p: int,
+                     machine: LPFMachine,
+                     plan_cache: Optional[PlanCache] = None,
+                     scratch: Optional[Slot] = None) -> SuperstepProgram:
+    """Rewrite one recorded trace: coalesce, eliminate dead transfers,
+    batch adjacent independent supersteps (cost-gated), and plan every
+    surviving superstep.  Pure trace-time Python — no JAX ops."""
+    plan = (plan_cache.get_or_plan if plan_cache is not None
+            else lambda m, p_, a, s=None: plan_sync(m, p_, a, s))
+
+    def plan_of(msgs: List[Msg], attrs: SyncAttributes) -> SuperstepPlan:
+        return plan(msgs, p, attrs, scratch)
+
+    tables = [list(st.msgs) for st in steps]
+    attrs_list = [st.attrs for st in steps]
+    labels = [st.label for st in steps]
+    modified = [False] * len(tables)
+
+    # (1) coalesce within each superstep, gated on the planned cost
+    n_coalesced = 0
+    for i in range(len(tables)):
+        cand, n = _coalesce_step(tables[i], attrs_list[i])
+        if n == 0:
+            continue
+        if _cost_of(plan_of(cand, attrs_list[i]), machine) <= \
+                _cost_of(plan_of(tables[i], attrs_list[i]), machine):
+            tables[i] = cand
+            modified[i] = True
+            n_coalesced += n
+
+    # (2) dead-transfer elimination across supersteps, gated per step —
+    # removing a message can demote a fused classification (a total
+    # exchange minus one message is coloured rounds), so a rewrite only
+    # lands when the planned cost does not regress
+    n_eliminated = 0
+    for i in range(len(tables)):
+        dead = _dead_msgs(tables, attrs_list, i)
+        if not dead:
+            continue
+        # removing a group's first message can reorder the cross-group
+        # CRCW application order; admit kills one by one, keeping the
+        # surviving groups' relative order intact
+        kill: List[int] = []
+        for k in dead:
+            trial = set(kill) | {k}
+            cand = [m for idx, m in enumerate(tables[i])
+                    if idx not in trial]
+            surviving = {(m.src_slot.sid, m.dst_slot.sid) for m in cand}
+            old_order = [g for g in _group_order(tables[i])
+                         if g in surviving]
+            if attrs_list[i].reduce_op is not None or \
+                    _group_order(cand) == old_order:
+                kill.append(k)
+        if not kill:
+            continue
+        cand = [m for idx, m in enumerate(tables[i])
+                if idx not in set(kill)]
+        if _cost_of(plan_of(cand, attrs_list[i]), machine) <= \
+                _cost_of(plan_of(tables[i], attrs_list[i]), machine):
+            tables[i] = cand
+            modified[i] = True
+            n_eliminated += len(kill)
+
+    # (3) batch adjacent independent supersteps when the model approves
+    groups: List[Tuple[List[Msg], SyncAttributes, str, List[int]]] = []
+    for i, (msgs, attrs, label) in enumerate(zip(tables, attrs_list,
+                                                 labels)):
+        if groups:
+            cur_msgs, cur_attrs, cur_label, cur_src = groups[-1]
+            if (cur_msgs and msgs and attrs == cur_attrs
+                    and _independent(cur_msgs, msgs, attrs.reduce_op)):
+                cand = cur_msgs + msgs
+                try:
+                    merged_plan = plan_of(cand, attrs)
+                except LPFFatalError:
+                    merged_plan = None      # e.g. bruck multigraph limits
+                if merged_plan is not None and \
+                        _cost_of(merged_plan, machine) < \
+                        _cost_of(plan_of(cur_msgs, cur_attrs), machine) + \
+                        _cost_of(plan_of(msgs, attrs), machine):
+                    groups[-1] = (cand, cur_attrs,
+                                  f"{cur_label}+{label}", cur_src + [i])
+                    continue
+        groups.append((msgs, attrs, label, [i]))
+    n_merged = len(tables) - len(groups)
+
+    _, _, canon_key = _slot_canon()
+    # canonical indices must follow the *raw* trace's first-occurrence
+    # order (what trace_slot_map of a replayed trace reproduces), not the
+    # optimized tables' — an eliminated first occurrence would skew them
+    for st in steps:
+        for m in st.msgs:
+            canon_key(m.src_slot)
+            canon_key(m.dst_slot)
+
+    opt_steps = []
+    for msgs, attrs, label, src_idx in groups:
+        table = tuple((m.src, m.dst, canon_key(m.src_slot), m.src_off,
+                       canon_key(m.dst_slot), m.dst_off, m.size, m.origin)
+                      for m in msgs)
+        opt_steps.append(OptimizedStep(
+            table=table, attrs=attrs, label=label,
+            plan=plan_of(msgs, attrs), merged_from=tuple(src_idx),
+            unchanged=len(src_idx) == 1 and not modified[src_idx[0]]))
+    return SuperstepProgram(
+        p=p, steps=tuple(opt_steps), n_recorded=len(steps),
+        n_coalesced=n_coalesced, n_eliminated=n_eliminated,
+        n_merged=n_merged)
+
+
+# ==========================================================================
+# the program cache
+# ==========================================================================
+
+class ProgramCache:
+    """LRU memo of :class:`SuperstepProgram` keyed by
+    :func:`program_signature` — the program-level twin of
+    :class:`repro.core.sync.PlanCache`.  A replayed trace skips the
+    optimizer *and* the planner (every optimized step carries its plan).
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._programs: "collections.OrderedDict[Hashable, SuperstepProgram]" \
+            = collections.OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def clear(self) -> None:
+        self._programs.clear()
+        self.stats = CacheStats()
+
+    def get_or_build(self, steps: Sequence[ProgramStep], p: int,
+                     machine: LPFMachine,
+                     plan_cache: Optional[PlanCache] = None,
+                     scratch: Optional[Slot] = None) -> SuperstepProgram:
+        # the machine's (g, l) keys the cache too: the cost gates price
+        # rewrites with them, so contexts over different link classes
+        # must not share optimization decisions
+        key = (program_signature(steps, p, scratch), machine.g, machine.l)
+        prog = self._programs.get(key)
+        if prog is not None:
+            self.stats.hits += 1
+            self._programs.move_to_end(key)
+            return prog
+        prog = optimize_program(steps, p, machine, plan_cache, scratch)
+        self.stats.misses += 1
+        self._programs[key] = prog
+        if len(self._programs) > self.maxsize:
+            self._programs.popitem(last=False)
+            self.stats.evictions += 1
+        return prog
+
+
+_GLOBAL_PROGRAM_CACHE = ProgramCache()
+
+
+def global_program_cache() -> ProgramCache:
+    """The process-wide program cache (shared across contexts/traces)."""
+    return _GLOBAL_PROGRAM_CACHE
+
+
+# ==========================================================================
+# numpy reference interpreter (the differential-test oracle)
+# ==========================================================================
+
+_NP_REDUCE = {"sum": np.add, "max": np.maximum, "min": np.minimum}
+
+
+def simulate_program(step_tables: Sequence[Tuple[Sequence[Msg],
+                                                 SyncAttributes]],
+                     values: Dict[int, np.ndarray]) -> Dict[int, np.ndarray]:
+    """Execute supersteps on host arrays under the p >= 2 LPF semantics.
+
+    ``values`` maps slot sid -> ``[p, slot.size]`` array (one row per
+    process).  Each superstep: all reads observe the pre-superstep
+    state; writes apply per slot-pair group in first-occurrence order,
+    within a group in ascending ``(src, dst, dst_off)`` — exactly the
+    arbitration :func:`repro.core.sync.plan_sync` encodes in its round
+    structure.  ``reduce_op`` supersteps combine overlapping writes with
+    first-write-replaces semantics.  Returns new arrays (inputs are not
+    mutated).  Compression is not modelled (it is lossy by design)."""
+    values = {sid: np.array(v) for sid, v in values.items()}
+    for msgs, attrs in step_tables:
+        if attrs.compress is not None:
+            raise ValueError("simulate_program cannot model lossy "
+                             "compressed supersteps")
+        pre = {sid: v.copy() for sid, v in values.items()}
+        reduce_fn = _NP_REDUCE[attrs.reduce_op] if attrs.reduce_op else None
+        written: Dict[int, np.ndarray] = {}
+        groups: "collections.OrderedDict[Tuple[int, int], List[Msg]]" = \
+            collections.OrderedDict()
+        for m in msgs:
+            groups.setdefault((m.src_slot.sid, m.dst_slot.sid),
+                              []).append(m)
+        for group in groups.values():
+            for m in sorted(group, key=lambda m_: (m_.src, m_.dst,
+                                                   m_.dst_off)):
+                chunk = pre[m.src_slot.sid][m.src,
+                                            m.src_off:m.src_off + m.size]
+                dst = values[m.dst_slot.sid]
+                seg = (m.dst, slice(m.dst_off, m.dst_off + m.size))
+                if reduce_fn is None:
+                    dst[seg] = chunk
+                else:
+                    wr = written.setdefault(
+                        m.dst_slot.sid,
+                        np.zeros(dst.shape, bool))
+                    dst[seg] = np.where(wr[seg],
+                                        reduce_fn(dst[seg], chunk), chunk)
+                    wr[seg] = True
+    return values

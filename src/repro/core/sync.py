@@ -752,6 +752,7 @@ def plan_signature(msgs: Sequence[Msg], p: int, attrs: SyncAttributes,
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     @property
     def plans(self) -> int:
@@ -793,6 +794,7 @@ class PlanCache:
         self._plans[key] = plan
         if len(self._plans) > self.maxsize:
             self._plans.popitem(last=False)
+            self.stats.evictions += 1
         return plan
 
 

@@ -56,6 +56,7 @@ def build_train_step(cfg: ModelConfig, mesh, *,
                      grad_sync: str = "gspmd",
                      sync_attrs: SyncAttributes = LPF_SYNC_DEFAULT,
                      grad_sync_method: str = "auto",
+                     grad_bucket_bytes: Optional[int] = None,
                      grad_accum: int = 1,
                      axis_roles: str = "fsdp_tp",
                      donate: bool = True) -> TrainStep:
@@ -139,11 +140,14 @@ def build_train_step(cfg: ModelConfig, mesh, *,
         def pod_body(params, opt, batch):
             loss, grads = loss_and_grads(params, batch, rt_pod,
                                          constrain=False)
-            # default ``auto`` picks the fused reduce-scatter+all-gather
-            # pair for uncompressed gradients, lax.psum rings otherwise
+            # default ``auto`` picks bucketed rs+ag pairs when
+            # ``grad_bucket_bytes`` is set, one fused reduce-scatter+
+            # all-gather pair for uncompressed gradients otherwise, and
+            # lax.psum rings under compression
             grads = pod_allreduce(grads, npods, "pod", attrs=sync_attrs,
                                   mean=True, ledger=ledger,
-                                  method=grad_sync_method)
+                                  method=grad_sync_method,
+                                  bucket_bytes=grad_bucket_bytes)
             loss = jax.lax.pmean(loss, "pod")
             params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
             metrics["loss"] = loss

@@ -19,6 +19,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
+try:  # hypothesis is an optional [test] extra; profiles only matter then
+    from hypothesis import settings as _hyp_settings
+
+    # "dev" keeps the fast tier fast; the nightly workflow selects
+    # "ci-slow" via `pytest --hypothesis-profile=ci-slow` so the
+    # differential harnesses get real fuzzing time.  Property tests that
+    # want the profile budget must NOT pin max_examples themselves.
+    _hyp_settings.register_profile("dev", max_examples=60, deadline=None)
+    _hyp_settings.register_profile("ci-slow", max_examples=600,
+                                   deadline=None)
+    _hyp_settings.load_profile("dev")
+except ImportError:  # pragma: no cover - seeded fallbacks take over
+    pass
+
 from repro.core import compat  # noqa: E402
 
 

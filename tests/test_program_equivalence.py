@@ -1,0 +1,396 @@
+"""Differential tests for the SuperstepProgram optimizer.
+
+The program layer rewrites recorded traces (coalescing, dead-transfer
+elimination, cost-gated superstep batching); every rewrite must preserve
+the LPF superstep semantics *bit-for-bit*.  The oracle is
+:func:`repro.core.simulate_program`, a pure-numpy interpreter of the
+p >= 2 semantics, so random programs over integer payloads are checked
+in milliseconds without a mesh.  Property tests run under hypothesis
+when available (``--hypothesis-profile=ci-slow`` raises the example
+budget in the nightly workflow) and fall back to a fixed seed sweep
+otherwise, mirroring ``test_sync_plan.py``.  The XLA tests at the
+bottom check the real ``ctx.program()`` record/replay path, including
+the program-level cache counters, and are marked ``slow``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (LPF_SYNC_DEFAULT, Msg, PlanCache, ProgramCache,
+                        ProgramStep, Slot, SyncAttributes,
+                        optimize_program, plan_sync, program_signature,
+                        simulate_program)
+from repro.core.machine import CPU_HOST, probe
+from repro.core.program import trace_slot_map
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.fast
+
+MACHINE = probe({"x": 8}, CPU_HOST)
+
+
+def table_property(fn):
+    if HAVE_HYPOTHESIS:
+        return settings(deadline=None)(
+            given(st.integers(0, 2**31 - 1))(fn))
+    return pytest.mark.parametrize("seed", range(60))(fn)
+
+
+def make_slot(sid, size, dtype="int32", kind="global"):
+    return Slot(sid=sid, name=f"s{sid}", size=size, dtype=np.dtype(dtype),
+                kind=kind, orig_shape=(size,))
+
+
+def random_program(seed):
+    """A random legal multi-superstep trace: (p, slots, steps)."""
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(2, 8))
+    slots = [make_slot(100 + i, int(rng.integers(8, 25)), "int32")
+             for i in range(int(rng.integers(2, 5)))]
+    steps = []
+    for k in range(int(rng.integers(2, 6))):
+        reduce_op = [None, None, None, "sum", "max", "min"][
+            int(rng.integers(6))]
+        attrs = SyncAttributes(
+            method=["auto", "direct"][int(rng.integers(2))],
+            reduce_op=reduce_op,
+            no_conflict=False)
+        msgs = []
+        for _ in range(int(rng.integers(0, 9))):
+            a = slots[int(rng.integers(len(slots)))]
+            b = slots[int(rng.integers(len(slots)))]
+            size = int(rng.integers(1, min(a.size, b.size) + 1))
+            msgs.append(Msg(
+                src=int(rng.integers(p)), dst=int(rng.integers(p)),
+                src_slot=a, src_off=int(rng.integers(a.size - size + 1)),
+                dst_slot=b, dst_off=int(rng.integers(b.size - size + 1)),
+                size=size))
+        steps.append(ProgramStep(tuple(msgs), attrs, f"s{k}"))
+    return p, slots, steps
+
+
+def initial_values(slots, p, seed):
+    rng = np.random.default_rng(seed + 1)
+    return {s.sid: rng.integers(-10_000, 10_000,
+                                size=(p, s.size)).astype(np.int32)
+            for s in slots}
+
+
+def run_eager(steps, values):
+    return simulate_program([(st_.msgs, st_.attrs) for st_ in steps],
+                            values)
+
+
+def run_optimized(prog, steps, values):
+    slot_map = trace_slot_map(steps)
+    tables = [(msgs, attrs)
+              for msgs, attrs, _, _ in prog.materialize(slot_map)]
+    return simulate_program(tables, values)
+
+
+# ---------------------------------------------------------------------------
+# the differential property: optimized replay == eager, bit for bit
+# ---------------------------------------------------------------------------
+
+@table_property
+def test_optimized_program_bit_identical_to_eager(seed):
+    """Random multi-superstep integer programs: the optimized trace must
+    leave every slot on every process bit-identical to superstep-by-
+    superstep execution — across CRCW and reduce_op supersteps, through
+    coalescing, dead-transfer elimination, and batching."""
+    p, slots, steps = random_program(seed)
+    prog = optimize_program(steps, p, MACHINE)
+    values = initial_values(slots, p, seed)
+    eager = run_eager(steps, values)
+    opt = run_optimized(prog, steps, values)
+    assert set(eager) == set(opt)
+    for sid in eager:
+        assert (eager[sid] == opt[sid]).all(), sid
+
+
+@table_property
+def test_optimizer_never_regresses_predicted_cost(seed):
+    """Every rewrite is cost-gated, so the optimized trace's total
+    predicted BSP time must never exceed the recorded trace's."""
+    p, slots, steps = random_program(seed)
+    prog = optimize_program(steps, p, MACHINE)
+
+    def t(plan):
+        return plan.cost.wire_bytes * MACHINE.g + plan.cost.rounds * MACHINE.l
+
+    raw = sum(t(plan_sync(list(st_.msgs), p, st_.attrs)) for st_ in steps)
+    opt = sum(t(st_.plan) for st_ in prog.steps)
+    assert opt <= raw + 1e-12
+    # bookkeeping is consistent: merged_from covers every recorded step
+    covered = sorted(i for st_ in prog.steps for i in st_.merged_from)
+    assert covered == list(range(len(steps)))
+
+
+@table_property
+def test_program_signature_slot_renaming(seed):
+    """Re-recording the same trace through freshly registered slots must
+    produce the same signature (the replay hit path)."""
+    p, slots, steps = random_program(seed)
+    remap = {}
+
+    def clone(s):
+        if s.sid not in remap:
+            remap[s.sid] = make_slot(500 + len(remap), s.size, s.dtype)
+        return remap[s.sid]
+
+    steps2 = [ProgramStep(tuple(
+        dataclasses.replace(m, src_slot=clone(m.src_slot),
+                            dst_slot=clone(m.dst_slot))
+        for m in st_.msgs), st_.attrs, st_.label) for st_ in steps]
+    assert program_signature(steps, p) == program_signature(steps2, p)
+
+
+# ---------------------------------------------------------------------------
+# targeted optimizer behaviour
+# ---------------------------------------------------------------------------
+
+def test_dead_transfer_eliminated():
+    """A write fully overwritten by a later superstep with no read in
+    between is dropped; the same write with an interposed read is not."""
+    p = 4
+    A, B = make_slot(1, 16), make_slot(2, 16)
+    dead = ProgramStep((Msg(0, 1, A, 0, B, 0, 8),), LPF_SYNC_DEFAULT, "w1")
+    overwrite = ProgramStep((Msg(2, 1, A, 8, B, 0, 8),), LPF_SYNC_DEFAULT,
+                            "w2")
+    prog = optimize_program([dead, overwrite], p, MACHINE)
+    assert prog.n_eliminated == 1
+    assert sum(len(st_.table) for st_ in prog.steps) == 1
+
+    read = ProgramStep((Msg(1, 3, B, 0, A, 0, 4),), LPF_SYNC_DEFAULT, "r")
+    prog2 = optimize_program([dead, read, overwrite], p, MACHINE)
+    assert prog2.n_eliminated == 0
+    assert sum(len(st_.table) for st_ in prog2.steps) == 3
+
+
+def test_dead_transfer_elimination_in_reduce_step():
+    """Accumulating writes are eliminable too, and the result still
+    matches eager execution exactly."""
+    p = 4
+    A, B = make_slot(1, 16), make_slot(2, 16)
+    steps = [
+        ProgramStep((Msg(0, 1, A, 0, B, 0, 4), Msg(2, 1, A, 0, B, 2, 4)),
+                    SyncAttributes(reduce_op="sum"), "acc"),
+        ProgramStep((Msg(3, 1, A, 8, B, 0, 8),), LPF_SYNC_DEFAULT, "over"),
+    ]
+    prog = optimize_program(steps, p, MACHINE)
+    assert prog.n_eliminated == 2
+    values = initial_values([A, B], p, 7)
+    eager = run_eager(steps, values)
+    opt = run_optimized(prog, steps, values)
+    for sid in eager:
+        assert (eager[sid] == opt[sid]).all()
+
+
+def test_contiguous_messages_coalesce():
+    p = 4
+    A, B = make_slot(1, 16), make_slot(2, 16)
+    steps = [ProgramStep((Msg(0, 1, A, 0, B, 0, 4), Msg(0, 1, A, 4, B, 4, 4),
+                          Msg(0, 1, A, 8, B, 8, 4)), LPF_SYNC_DEFAULT, "c")]
+    prog = optimize_program(steps, p, MACHINE)
+    assert prog.n_coalesced == 2
+    assert len(prog.steps[0].table) == 1
+    (src, dst, _, soff, _, doff, size, _) = prog.steps[0].table[0]
+    assert (src, dst, soff, doff, size) == (0, 1, 0, 0, 12)
+    # a same-pair gap (non-contiguous) must not coalesce
+    steps2 = [ProgramStep((Msg(0, 1, A, 0, B, 0, 4),
+                           Msg(0, 1, A, 8, B, 8, 4)), LPF_SYNC_DEFAULT, "g")]
+    assert optimize_program(steps2, p, MACHINE).n_coalesced == 0
+
+
+def test_independent_supersteps_batch_when_cheaper():
+    """Two one-round supersteps over disjoint processes on the same slot
+    pair colour into a single round when merged — the model approves and
+    the trace shrinks to one sync; a data-dependent pair must not merge."""
+    p = 4
+    A, B = make_slot(1, 16), make_slot(2, 16)
+    s1 = ProgramStep((Msg(0, 1, A, 0, B, 0, 4),), LPF_SYNC_DEFAULT, "x")
+    s2 = ProgramStep((Msg(2, 3, A, 4, B, 4, 4),), LPF_SYNC_DEFAULT, "y")
+    prog = optimize_program([s1, s2], p, MACHINE)
+    assert prog.n_merged == 1 and len(prog.steps) == 1
+    assert prog.steps[0].label == "x+y"
+    assert prog.steps[0].plan.cost.rounds == 1
+    assert prog.steps[0].merged_from == (0, 1)
+
+    # s3 reads what s1 wrote -> dependent, stays a separate superstep
+    s3 = ProgramStep((Msg(1, 3, B, 0, A, 8, 4),), LPF_SYNC_DEFAULT, "z")
+    prog2 = optimize_program([s1, s3], p, MACHINE)
+    assert prog2.n_merged == 0 and len(prog2.steps) == 2
+
+
+def test_batching_respects_attrs_boundaries():
+    """Supersteps with different attributes (a reduce next to a CRCW
+    step) never merge, whatever the cost model says."""
+    p = 4
+    A, B = make_slot(1, 16), make_slot(2, 16)
+    s1 = ProgramStep((Msg(0, 1, A, 0, B, 0, 4),),
+                     SyncAttributes(reduce_op="sum"), "r")
+    s2 = ProgramStep((Msg(2, 3, A, 4, B, 4, 4),), LPF_SYNC_DEFAULT, "w")
+    prog = optimize_program([s1, s2], p, MACHINE)
+    assert prog.n_merged == 0 and len(prog.steps) == 2
+
+
+# ---------------------------------------------------------------------------
+# cache statistics (plan + program level)
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_counts_evictions():
+    a, b = make_slot(1, 16), make_slot(2, 16)
+    cache = PlanCache(maxsize=2)
+    for dst in (1, 2, 3):
+        cache.get_or_plan([Msg(0, dst, a, 0, b, 0, 4)], 4, LPF_SYNC_DEFAULT)
+    assert cache.stats.evictions == 1
+    assert cache.stats.misses == 3 and cache.stats.hits == 0
+
+
+def test_program_cache_hits_and_evictions():
+    p = 4
+    A, B = make_slot(1, 16), make_slot(2, 16)
+
+    def step(dst):
+        return [ProgramStep((Msg(0, dst, A, 0, B, 0, 4),),
+                            LPF_SYNC_DEFAULT, "s")]
+
+    cache = ProgramCache(maxsize=2)
+    prog1 = cache.get_or_build(step(1), p, MACHINE)
+    prog2 = cache.get_or_build(step(1), p, MACHINE)
+    assert prog1 is prog2
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    cache.get_or_build(step(2), p, MACHINE)
+    cache.get_or_build(step(3), p, MACHINE)
+    assert cache.stats.evictions == 1 and len(cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# XLA: the real ctx.program() record/replay path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_recorded_program_matches_eager_on_mesh(mesh8):
+    """A program with a dead transfer, a reduce superstep and two
+    batchable shifts must produce bit-identical int32 slots through
+    ``ctx.program()`` and through eager per-superstep sync — and the
+    recorded path's ledger must carry fewer messages (the dead transfer
+    is gone)."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import core as lpf
+
+    def body(ctx, s, p, recorded):
+        ctx.resize_memory_register(3)
+        ctx.resize_message_queue(4 * p)
+        a = ctx.register_global(
+            "a", (jnp.arange(8) + 100 * ctx.pid).astype(jnp.int32))
+        b = ctx.register_global("b", jnp.zeros(8, jnp.int32))
+        c = ctx.register_global("c", jnp.zeros(8, jnp.int32))
+
+        def steps():
+            # dead: fully overwritten by the next superstep, never read
+            ctx.put(a, b, to=lambda s_: (s_ + 1) % p, size=4)
+            ctx.sync(label="dead")
+            ctx.put(a, b, to=lambda s_: (s_ + 2) % p, src_off=4, size=4)
+            ctx.sync(label="live")
+            # independent write to c on disjoint offsets -> batchable
+            ctx.put(a, c, to=lambda s_: (s_ + 3) % p, dst_off=4, size=4)
+            ctx.sync(label="other")
+            # accumulating superstep: all pids add into c[0:2] of pid 0
+            ctx.put(a, c, to=0, size=2)
+            ctx.sync(lpf.SyncAttributes(reduce_op="sum"), label="acc")
+
+        if recorded:
+            with ctx.program():
+                steps()
+        else:
+            steps()
+        return ctx.value(b), ctx.value(c)
+
+    from repro.core import compat
+    import jax
+
+    results = {}
+    ledgers = {}
+    for recorded in (False, True):
+        box = {}
+
+        def wrapped(_):
+            ctx = lpf.LPFContext(("x",))
+            box["ledger"] = ctx.ledger
+            return body(ctx, ctx.pid, ctx.p, recorded)
+
+        fn = jax.jit(compat.shard_map(
+            wrapped, mesh=mesh8, in_specs=(P(),),
+            out_specs=(P("x"), P("x")), check_vma=False))
+        results[recorded] = [np.asarray(v) for v in fn(jnp.zeros(1))]
+        ledgers[recorded] = box["ledger"]
+
+    for ve, vr in zip(results[False], results[True]):
+        assert (ve == vr).all()
+    eager_msgs = sum(r.n_msgs for r in ledgers[False].records)
+    replay_msgs = sum(r.n_msgs for r in ledgers[True].records)
+    assert replay_msgs < eager_msgs       # the dead transfer is gone
+    # ledger-predicted == executed for every optimized superstep: the
+    # entries are the plans' own costs with labels attached
+    for r in ledgers[True].records:
+        assert r.wire_bytes >= 0 and r.method in (
+            "direct", "bruck", "valiant", "noop", "fused", "fused_ag",
+            "fused_rs", "fused_scatter", "fused_gather", "seq")
+
+
+@pytest.mark.slow
+def test_program_cache_stats_over_replay_loop(mesh8):
+    """Replaying one recorded program 10x: >= 9 program-cache hits and
+    zero planning passes after the first iteration."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import core as lpf
+
+    plan_cache = lpf.PlanCache()
+    program_cache = lpf.ProgramCache()
+    stats_box = {}
+
+    def spmd(ctx, s, p, _):
+        ctx.resize_memory_register(2)
+        ctx.resize_message_queue(2 * p)
+        a = ctx.register_global("a", jnp.arange(4.0) + ctx.pid)
+        b = ctx.register_global("b", jnp.zeros(8))
+        for i in range(10):
+            with ctx.program():
+                ctx.put(a, b, to=lambda s_: (s_ + 1) % p, size=4)
+                ctx.sync(label="shift")
+                ctx.put(a, b, to=lambda s_: (s_ + 2) % p, dst_off=4,
+                        size=4)
+                ctx.sync(label="shift2")
+            if i == 0:
+                stats_box["plans_after_first"] = ctx.plan_cache.stats.misses
+        stats_box["stats"] = ctx.cache_stats
+        return ctx.value(b)
+
+    def wrapped(_):
+        ctx = lpf.LPFContext(("x",), plan_cache=plan_cache,
+                             program_cache=program_cache)
+        return spmd(ctx, ctx.pid, ctx.p, None)
+
+    import jax
+    from repro.core import compat
+    fn = jax.jit(compat.shard_map(wrapped, mesh=mesh8, in_specs=(P(),),
+                                  out_specs=P("x"), check_vma=False))
+    out = np.asarray(fn(jnp.zeros(1))).reshape(8, 8)
+    for d in range(8):
+        np.testing.assert_allclose(out[d, :4], np.arange(4.0) + (d - 1) % 8)
+        np.testing.assert_allclose(out[d, 4:], np.arange(4.0) + (d - 2) % 8)
+    stats = stats_box["stats"]
+    assert stats["program"].hits >= 9
+    assert stats["program"].misses == 1
+    # zero re-plans: no planner activity after the first iteration
+    assert plan_cache.stats.misses == stats_box["plans_after_first"]

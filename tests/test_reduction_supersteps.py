@@ -167,10 +167,14 @@ def test_broadcast_takes_two_fused_rounds(mesh8):
 
 
 def test_plan_cache_reuses_reduction_plans(mesh8):
-    """Repeated allreduces through fresh slots must hit the plan cache
-    (the fused_rs signature is slot-renamed like every other plan)."""
+    """Repeated allreduces through fresh slots must not re-plan: the
+    first invocation plans its two supersteps once (slot-renamed
+    signatures); the second replays the whole recorded program from the
+    program cache without consulting the planner at all."""
     cache = lpf.global_plan_cache()
     cache.clear()
+    pcache = lpf.global_program_cache()
+    pcache.clear()
 
     def spmd(ctx, s, p, xt):
         y = bsp.allreduce(ctx, xt, label="ar1")
@@ -178,8 +182,10 @@ def test_plan_cache_reuses_reduction_plans(mesh8):
 
     fn, compiled, ledger = _compile_with_ledger(
         mesh8, spmd, jnp.zeros(64, jnp.float32), P("x"))
-    # 2 allreduces x 2 supersteps = 4 syncs over 2 distinct relations
-    assert cache.stats.misses == 2 and cache.stats.hits == 2
+    # 2 allreduces x 2 supersteps = 4 syncs over 2 distinct relations;
+    # the second allreduce is a program-cache hit (0 further plans)
+    assert cache.stats.misses == 2 and cache.stats.hits == 0
+    assert pcache.stats.misses == 1 and pcache.stats.hits == 1
     a, b, c, d = ledger.records
     assert dataclasses.replace(a, label="") == dataclasses.replace(
         c, label="")

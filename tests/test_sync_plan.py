@@ -29,9 +29,11 @@ pytestmark = pytest.mark.fast
 
 def table_property(fn):
     """Run ``fn(seed)`` over many seeds: hypothesis-driven (with
-    shrinking) when available, a fixed sweep otherwise."""
+    shrinking) when available, a fixed sweep otherwise.  The example
+    budget comes from the active hypothesis profile (``dev`` locally,
+    ``ci-slow`` in the nightly workflow — see ``conftest.py``)."""
     if HAVE_HYPOTHESIS:
-        return settings(max_examples=60, deadline=None)(
+        return settings(deadline=None)(
             given(st.integers(0, 2**31 - 1))(fn))
     return pytest.mark.parametrize("seed", range(40))(fn)
 
