@@ -107,10 +107,13 @@ def bsp_fft_spmd(ctx: LPFContext, x_local: jnp.ndarray, n: int, *,
     phase = (s.astype(real_dt) * k2 / n) * real_dt.type(sign * 2.0 * np.pi)
     Z = X * jax.lax.complex(jnp.cos(phase), jnp.sin(phase)).astype(ctype)
 
-    # (2)-(4) run recorded: the twiddle matmul reads the redistribute
-    # output, so each superstep flushes (and replays from the program
-    # cache) individually — batching across the pair needs the
-    # dataflow-precise flush on the ROADMAP.
+    # (2)-(4) run recorded: the twiddle matmul is a genuine compute
+    # dependency between redistribute and reorder, so the pair can never
+    # batch — but the flush is dataflow-precise: reading Zk executes
+    # exactly the redistribute's cone, so when this FFT runs inside an
+    # enclosing recorded program (a batched spectral pipeline), the
+    # caller's independent supersteps stay recorded and may overlap
+    # with the reorder.
     with ctx.program("bsp_fft"):
         # (2) the single redistribution: block d of my k2-range to process d
         w = npp // p  # n / p^2 elements per (src, dst) pair

@@ -86,17 +86,26 @@ def pagerank_spmd(ctx: LPFContext, g: PartitionedGraph, shard: dict, *,
 
     def one_iter(ctx2: LPFContext, r: jnp.ndarray, dmass: jnp.ndarray
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        halo = _halo_exchange(ctx2, g, r, attrs, pack_idx)
-        x_ext = jnp.concatenate([r, halo])
-        contrib = vals * x_ext[col_ext]
-        spmv = jax.ops.segment_sum(contrib, row_ids, num_segments=rows + 1,
-                                   indices_are_sorted=False)[:rows]
-        r_new = alpha * (spmv + dmass / n) + (1.0 - alpha) / n
-        # fused 3-word allreduce: next dangling mass, residual, (spare)
-        stats = jnp.stack([jnp.sum(r_new * dangling),
-                           jnp.sum(jnp.abs(r_new - r)),
-                           jnp.zeros((), jnp.float32)])
-        tot = reduce3(ctx2, stats)
+        # the whole iteration records as one program: the halo read is a
+        # *dataflow-precise* flush (it executes exactly the halo
+        # superstep's cone, not whatever else the trace holds), so the
+        # halo + score-update pattern keeps independent supersteps —
+        # the nested stats-allreduce pair — recorded across the SpMV
+        # compute barrier, and replays per-iteration traces from the
+        # program cache
+        with ctx2.program("pr.iter"):
+            halo = _halo_exchange(ctx2, g, r, attrs, pack_idx)
+            x_ext = jnp.concatenate([r, halo])
+            contrib = vals * x_ext[col_ext]
+            spmv = jax.ops.segment_sum(contrib, row_ids,
+                                       num_segments=rows + 1,
+                                       indices_are_sorted=False)[:rows]
+            r_new = alpha * (spmv + dmass / n) + (1.0 - alpha) / n
+            # fused 3-word allreduce: next dangling mass, residual, (spare)
+            stats = jnp.stack([jnp.sum(r_new * dangling),
+                               jnp.sum(jnp.abs(r_new - r)),
+                               jnp.zeros((), jnp.float32)])
+            tot = reduce3(ctx2, stats)
         return r_new, tot[0], tot[1]
 
     # initial dangling mass of the uniform vector

@@ -45,18 +45,20 @@ to thread costs upward without reading the ledger back.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LPFContext, LPF_SYNC_DEFAULT, SyncAttributes
+from repro.core import LPFContext, LPF_SYNC_DEFAULT, Slot, SyncAttributes
 from repro.core.errors import LPFFatalError
 from repro.core.sync import _REDUCE_FNS
 
 __all__ = ["broadcast", "allgather", "alltoall", "allreduce", "reduce",
-           "exscan", "pad_to"]
+           "exscan", "pad_to", "CollectiveHandle", "allreduce_start",
+           "allreduce_done"]
 
 
 def pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -195,28 +197,94 @@ def _reduce_scatter_chunk(ctx: LPFContext, xp: jnp.ndarray, c: int,
     return buf
 
 
-def _fused_reduction(ctx: LPFContext, x: jnp.ndarray, red_op: str,
-                     attrs: SyncAttributes, label: str, suffix: str,
-                     chunk_dsts: Callable) -> jnp.ndarray:
-    """Shared fused-reduction tail: reduce-scatter the chunks, then a
-    second superstep distributing them per ``chunk_dsts(s, p)`` — every
-    process s's reduced [c]-chunk lands at offset s*c on those pids."""
+@dataclasses.dataclass
+class CollectiveHandle:
+    """A split-phase collective in flight: its supersteps are staged
+    (deferred into the recording trace, or already executed when the
+    context is not recording) but the result read is postponed.  Reading
+    through the matching ``*_done`` call is what flushes the handle's
+    dependency cone — starting several collectives before finishing any
+    keeps them in one trace, where the optimizer batches or overlaps
+    them (the DDP bucket pipeline)."""
+
+    out_slot: Optional[Slot]
+    n: int                       # valid payload length in the out slot
+    p: int
+    value: Optional[jnp.ndarray] = None   # eager fallback result
+
+
+def _fused_reduction_start(ctx: LPFContext, x: jnp.ndarray, red_op: str,
+                           attrs: SyncAttributes, label: str, suffix: str,
+                           chunk_dsts: Callable) -> CollectiveHandle:
+    """Stage the fused-reduction pair split-phase: reduce-scatter the
+    chunks, then a second superstep distributing them per
+    ``chunk_dsts(s, p)`` — every process s's reduced [c]-chunk lands at
+    offset s*c on those pids.  The result read is deferred to
+    :func:`_fused_reduction_done`."""
     p = ctx.p
     n = int(x.shape[0])
     c = _chunk(n, p)
-    with ctx.program("fused_reduction"):
-        ctx.resize_memory_register(ctx.registry.n_active + 3)
-        ctx.resize_message_queue(p * p)
-        buf = _reduce_scatter_chunk(ctx, pad_to(x, c * p), c, red_op, attrs,
-                                    label)
-        out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
-        ctx.put_msgs([(s, d, buf, 0, out, s * c, c)
-                      for s in range(p) for d in chunk_dsts(s, p)])
-        ctx.sync(attrs, label=f"{label}.{suffix}")
-        result = ctx.tensor(out)[:n]
-        ctx.deregister(buf)
-        ctx.deregister(out)
+    ctx.resize_memory_register(ctx.registry.n_active + 3)
+    ctx.resize_message_queue(p * p)
+    buf = _reduce_scatter_chunk(ctx, pad_to(x, c * p), c, red_op, attrs,
+                                label)
+    out = ctx.register_global(f"{label}.out", jnp.zeros(c * p, x.dtype))
+    ctx.put_msgs([(s, d, buf, 0, out, s * c, c)
+                  for s in range(p) for d in chunk_dsts(s, p)])
+    ctx.sync(attrs, label=f"{label}.{suffix}")
+    ctx.deregister(buf)      # deferred while the trace references it
+    return CollectiveHandle(out_slot=out, n=n, p=p)
+
+
+def _fused_reduction_done(ctx: LPFContext, handle: CollectiveHandle
+                          ) -> jnp.ndarray:
+    if handle.value is not None:
+        return handle.value
+    result = ctx.tensor(handle.out_slot)[:handle.n]
+    ctx.deregister(handle.out_slot)
     return result
+
+
+def _fused_reduction(ctx: LPFContext, x: jnp.ndarray, red_op: str,
+                     attrs: SyncAttributes, label: str, suffix: str,
+                     chunk_dsts: Callable) -> jnp.ndarray:
+    with ctx.program("fused_reduction"):
+        handle = _fused_reduction_start(ctx, x, red_op, attrs, label,
+                                        suffix, chunk_dsts)
+        result = _fused_reduction_done(ctx, handle)
+    return result
+
+
+def allreduce_start(ctx: LPFContext, x: jnp.ndarray, *,
+                    op: Callable = jnp.add,
+                    attrs: SyncAttributes = LPF_SYNC_DEFAULT,
+                    label: str = "allreduce") -> CollectiveHandle:
+    """Split-phase allreduce, superstep 1 of the DDP overlap story:
+    stage the reduce-scatter + allgather pair *without* reading the
+    result.  Inside a recording, several started allreduces share one
+    trace, where the optimizer issues bucket k's allgather overlapped
+    with bucket k+1's reduce-scatter; :func:`allreduce_done` flushes
+    exactly the handle's dependency cone.  Ops with no fused lowering
+    (exotic combine fns, compressed wire) fall back to the eager
+    exchange algorithm and return a pre-resolved handle."""
+    if ctx.p == 1:
+        return CollectiveHandle(None, int(x.shape[0]), 1, value=x)
+    red_op = _use_fused_reduction(op, attrs)
+    if red_op is None:
+        return CollectiveHandle(
+            None, int(x.shape[0]), ctx.p,
+            value=_allreduce_exchange(ctx, x, op=op, attrs=attrs,
+                                      label=label))
+    return _fused_reduction_start(ctx, x, red_op, attrs, label, "ag",
+                                  lambda s, p_: range(p_))
+
+
+def allreduce_done(ctx: LPFContext, handle: CollectiveHandle, *,
+                   mean: bool = False) -> jnp.ndarray:
+    """Finish a :func:`allreduce_start`: read (cone-flushing) the result
+    and release the slot; optionally average."""
+    out = _fused_reduction_done(ctx, handle)
+    return out / handle.p if mean else out
 
 
 def reduce(ctx: LPFContext, x: jnp.ndarray, root: int = 0, *,

@@ -58,13 +58,14 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
     pod) the function is the identity — single-pod programs pay nothing.
 
     With ``bucket_bytes`` the per-leaf gradients are packed into
-    ~``bucket_bytes``-sized buckets and each bucket is allreduced as its
-    own reduce-scatter + all-gather pair: L per-layer syncs become
-    ``ceil(sum(B)/bucket)`` fat supersteps.  Each bucket's pair is
-    recorded/replayed as its own LPF program (the collective's result
-    read is a flush barrier, so buckets cannot batch with each other
-    today — overlapping them is a ROADMAP item); repeated training
-    steps replay the cached per-bucket traces."""
+    ~``bucket_bytes``-sized buckets and every bucket's reduce-scatter +
+    all-gather pair is staged *split-phase* into one recorded LPF
+    program before any result is read: the optimizer issues bucket k's
+    all-gather overlapped with bucket k+1's reduce-scatter (the classic
+    DDP pipeline) because only adjacent same-bucket supersteps are
+    data-dependent, and the dataflow-precise flush lets each result read
+    execute exactly its own bucket's cone.  Repeated training steps
+    replay the whole cached multi-bucket trace."""
     if pod_axis not in mesh.axis_names or mesh.shape[pod_axis] == 1:
         return lambda grads: grads
 
@@ -81,24 +82,34 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
                          for l in leaves_in]
                 buckets = bucketize([f.nbytes for f in flats],
                                     bucket_bytes)
+                # start every bucket's rs+ag pair inside ONE recording;
+                # exiting the program flushes the whole multi-bucket
+                # trace as one optimized program with the cross-bucket
+                # supersteps issued split-phase (ag_k || rs_{k+1})
+                handles = []
+                with ctx.program("bucket_sync"):
+                    for bi, idxs in enumerate(buckets):
+                        flat = jnp.concatenate([flats[i] for i in idxs]) \
+                            if len(idxs) > 1 else flats[idxs[0]]
+                        n = flat.shape[0]
+                        pad = (-n) % max(p, 1)
+                        flat = collectives.pad_to(flat, n + pad)
+                        handles.append((idxs, n, collectives.allreduce_start(
+                            ctx, flat, attrs=attrs, label=f"bucket{bi}")))
                 red_parts = [None] * len(flats)
-                # each allreduce records its own 2-superstep program
-                # (its result read is a flush barrier)
-                for idxs in buckets:
-                    flat = jnp.concatenate([flats[i] for i in idxs]) \
-                        if len(idxs) > 1 else flats[idxs[0]]
-                    n = flat.shape[0]
-                    pad = (-n) % max(p, 1)
-                    flat = collectives.pad_to(flat, n + pad)
-                    red = lpf_allreduce(ctx, flat, attrs=attrs,
-                                        mean=mean)[:n]
+                for idxs, n, handle in handles:
+                    red = collectives.allreduce_done(ctx, handle,
+                                                     mean=mean)[:n]
                     off = 0
                     for i in idxs:
                         k = flats[i].shape[0]
                         red_parts[i] = red[off:off + k]
                         off += k
                 outs = []
-                for part, shp, dt in zip(red_parts, shapes, dtypes):
+                for part, flat, shp, dt in zip(red_parts, flats, shapes,
+                                               dtypes):
+                    if part is None:    # zero-byte leaf: nothing on the wire
+                        part = flat
                     outs.append(part.reshape(shp).astype(dt))
                 return tuple(outs)
 

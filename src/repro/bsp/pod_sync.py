@@ -28,8 +28,21 @@ instead.  Two methods:
   L per-layer supersteps become ceil(sum(B)/bucket) fat ones — the BSP
   model's "fewer, fatter h-relations" applied to the DCN hop (each
   extra superstep pays another ``l``, and DCN ``l`` is the largest in
-  the machine table).  ``bucket_bytes=None`` degenerates to one bucket
-  (== ``rs+ag``).
+  the machine table).  Buckets are issued in order with no explicit
+  fence (XLA schedules freely, as it always has).
+  ``bucket_bytes=None`` degenerates to one bucket (== ``rs+ag``).
+* ``bucketed_fenced`` — the same buckets with the BSP superstep fence
+  made explicit (an optimization barrier ties bucket k+1's input to
+  bucket k's output, so it cannot launch early): the faithful
+  *sequential* BSP schedule, and the baseline the overlap benchmark
+  measures against.
+* ``bucketed_overlap`` — the same buckets issued *split-phase*: bucket
+  k+1's reduce-scatter launches before bucket k's all-gather, so the
+  two independent collectives overlap on the wire — the classic DDP
+  gradient-bucket pipeline.  The ledger records the overlapped
+  schedule itself ([rs0][ag_k||rs_k+1]...[ag_B-1], each group priced
+  ``max(h_i)g + max(rounds_i)l + l_overlap`` via ``overlap_cost``).
+  ``auto`` with ``bucket_bytes`` picks this.
 * ``ring``  — one ``lax.psum`` per leaf (XLA's own ring all-reduce);
   the compressed path always uses this, as int16 summands must be
   combined before dequantisation.
@@ -49,7 +62,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import CostLedger, LPF_SYNC_DEFAULT, SuperstepCost, SyncAttributes
+from repro.core import (CostLedger, LPF_SYNC_DEFAULT, SuperstepCost,
+                        SyncAttributes, overlap_cost)
 
 __all__ = ["pod_allreduce", "bucketize"]
 
@@ -63,13 +77,26 @@ def bucketize(sizes_bytes, bucket_bytes: Optional[int]):
     """Greedy contiguous packing of per-leaf byte sizes into buckets of
     at most ``bucket_bytes`` (a leaf larger than the bucket gets its
     own).  Returns a list of index lists.  ``bucket_bytes=None`` packs
-    everything into one bucket; ``bucket_bytes<=0`` is per-leaf."""
-    if not sizes_bytes:
+    everything into one bucket.  Zero-byte leaves are skipped — they
+    appear in no bucket (nothing to put on the wire) — so callers must
+    pass such leaves through unchanged.  ``bucket_bytes <= 0`` is
+    rejected: it used to silently mean per-leaf, which callers hit by
+    accident when a byte-size computation underflowed."""
+    if bucket_bytes is not None and bucket_bytes <= 0:
+        raise ValueError(
+            f"bucket_bytes must be a positive byte count or None (one "
+            f"bucket), got {bucket_bytes!r}; pass e.g. 1 for per-leaf "
+            f"buckets")
+    if any(b < 0 for b in sizes_bytes):
+        raise ValueError(f"negative leaf size in {sizes_bytes!r}")
+    nonzero = [i for i, b in enumerate(sizes_bytes) if b > 0]
+    if not nonzero:
         return []
     if bucket_bytes is None:
-        return [list(range(len(sizes_bytes)))]
+        return [nonzero]
     buckets, cur, cur_b = [], [], 0
-    for i, b in enumerate(sizes_bytes):
+    for i in nonzero:
+        b = sizes_bytes[i]
         if cur and cur_b + b > bucket_bytes:
             buckets.append(cur)
             cur, cur_b = [], 0
@@ -79,12 +106,14 @@ def bucketize(sizes_bytes, bucket_bytes: Optional[int]):
     return buckets
 
 
-def _rs_ag_allreduce(tree, q: int, axis: str):
-    """Flatten -> reduce-scatter -> all-gather -> unflatten (all f32).
-    Returns the summed tree (f32 leaves) and the per-pod chunk length."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    if not leaves:
-        return tree, 0
+def _rs_start(leaves, q: int, axis: str, fence=None):
+    """The split-phase *start* half of one bucket's allreduce: flatten,
+    pad, and issue the reduce-scatter.  ``fence`` (a prior bucket's
+    completed output) is tied in through an optimization barrier when
+    the caller wants the BSP superstep order enforced — the synchronous
+    bucketed schedule; the overlapped schedule passes ``None`` so XLA
+    may run this reduce-scatter while the previous bucket's all-gather
+    is still on the wire."""
     shapes = [l.shape for l in leaves]
     flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
                             for l in leaves])
@@ -92,8 +121,15 @@ def _rs_ag_allreduce(tree, q: int, axis: str):
     m = -(-n // q)
     if q * m > n:
         flat = jnp.concatenate([flat, jnp.zeros(q * m - n, jnp.float32)])
+    if fence is not None:
+        flat, _ = lax.optimization_barrier((flat, fence))
     red = lax.psum_scatter(flat.reshape(q, m), axis,
                            scatter_dimension=0, tiled=False)
+    return red, shapes, n, m
+
+
+def _ag_finish(red, shapes, n: int, q: int, axis: str):
+    """The *done* half: all-gather the reduced chunks and unflatten."""
     full = lax.all_gather(red, axis, tiled=True)[:n]
     outs = []
     off = 0
@@ -101,7 +137,7 @@ def _rs_ag_allreduce(tree, q: int, axis: str):
         k = int(np.prod(shp)) if shp else 1
         outs.append(full[off:off + k].reshape(shp))
         off += k
-    return jax.tree_util.tree_unflatten(treedef, outs), m
+    return outs, full
 
 
 def pod_allreduce(tree, q: int, axis: str = "pod", *,
@@ -113,24 +149,29 @@ def pod_allreduce(tree, q: int, axis: str = "pod", *,
     """All-reduce a pytree over the ``axis`` of size ``q``; payloads
     optionally int16-quantised with a shared scale.
 
-    ``method``: ``auto`` (bucketed when ``bucket_bytes`` is set, rs+ag
-    when uncompressed, ring otherwise), ``rs+ag`` (explicit
+    ``method``: ``auto`` (bucketed_overlap when ``bucket_bytes`` is set,
+    rs+ag when uncompressed, ring otherwise), ``rs+ag`` (explicit
     reduce-scatter + all-gather of the whole flattened tree),
     ``bucketed`` (one rs+ag pair per ~``bucket_bytes`` of gradients),
+    ``bucketed_fenced`` (the same with an explicit BSP fence between
+    buckets — the faithful sequential schedule), ``bucketed_overlap``
+    (the buckets issued split-phase: bucket k+1's reduce-scatter
+    launches before bucket k's all-gather — the classic DDP overlap),
     or ``ring`` (one ``lax.psum`` per leaf)."""
     if q <= 1:
         return tree
     compress = attrs.compress is not None
-    if method not in ("auto", "rs+ag", "ring", "bucketed"):
+    bucket_methods = ("bucketed", "bucketed_fenced", "bucketed_overlap")
+    if method not in ("auto", "rs+ag", "ring") + bucket_methods:
         raise ValueError(f"unknown pod_allreduce method {method!r}")
     if method == "auto":
         method = "ring" if compress else \
-            ("bucketed" if bucket_bytes is not None else "rs+ag")
-    if method in ("rs+ag", "bucketed") and compress:
+            ("bucketed_overlap" if bucket_bytes is not None else "rs+ag")
+    if method in ("rs+ag",) + bucket_methods and compress:
         raise ValueError(f"{method} cannot combine quantised payloads; "
                          "use method='ring' with compression")
 
-    if method in ("rs+ag", "bucketed"):
+    if method in ("rs+ag",) + bucket_methods:
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         if not leaves:
             return tree
@@ -138,19 +179,78 @@ def pod_allreduce(tree, q: int, axis: str = "pod", *,
         sizes = [int(np.prod(l.shape)) * 4 if l.shape else 4
                  for l in leaves]
         buckets = bucketize(
-            sizes, bucket_bytes if method == "bucketed" else None)
-        acc_leaves = [None] * len(leaves)
-        for bi, idxs in enumerate(buckets):
-            acc, m = _rs_ag_allreduce([leaves[i] for i in idxs], q, axis)
-            for i, a in zip(idxs, acc):
+            sizes, bucket_bytes if method != "rs+ag" else None)
+        # zero-byte leaves ride no bucket: pass them through unchanged
+        acc_leaves = [l.astype(jnp.float32) if sizes[i] == 0 else None
+                      for i, l in enumerate(leaves)]
+
+        def half_cost(bi, m, tag):
+            """One superstep (the rs or the ag half) of bucket bi."""
+            wire = (q - 1) * m * 4              # f32 on the wire, per pod
+            return SuperstepCost(
+                label=f"pod_allreduce.b{bi}.{tag}[x{q}]", h_bytes=wire,
+                wire_bytes=wire, total_wire_bytes=wire * q, rounds=1,
+                n_msgs=q * q, method=method)
+
+        def account_pair(bi, m):
+            if ledger is None:
+                return
+            wire = 2 * (q - 1) * m * 4          # f32 on the wire, per pod
+            suffix = f".b{bi}" if method != "rs+ag" else ""
+            ledger.add(SuperstepCost(
+                label=f"pod_allreduce{suffix}[x{q}]", h_bytes=wire,
+                wire_bytes=wire, total_wire_bytes=wire * q, rounds=2,
+                n_msgs=2 * q * q, method=method))
+
+        def finish(state, account=True):
+            bi, idxs, red, shapes, n, m = state
+            outs, full = _ag_finish(red, shapes, n, q, axis)
+            for i, a in zip(idxs, outs):
                 acc_leaves[i] = a
-            if ledger is not None:
-                wire = 2 * (q - 1) * m * 4      # f32 on the wire, per pod
-                suffix = f".b{bi}" if method == "bucketed" else ""
-                ledger.add(SuperstepCost(
-                    label=f"pod_allreduce{suffix}[x{q}]", h_bytes=wire,
-                    wire_bytes=wire, total_wire_bytes=wire * q, rounds=2,
-                    n_msgs=2 * q * q, method=method))
+            if account:
+                account_pair(bi, m)
+            return full
+
+        if method == "bucketed_overlap":
+            # DDP-style software pipeline: issue bucket k+1's
+            # reduce-scatter *before* bucket k's all-gather, so the two
+            # independent collectives can overlap on the wire.  The
+            # ledger records the schedule as issued — [rs0]
+            # [ag_k||rs_k+1]... [ag_B-1] — with every overlap group
+            # priced by the overlap cost model, so predicted_seconds
+            # over this ledger is the overlapped schedule's time, not
+            # the sequential one's.
+            pending = None
+            for bi, idxs in enumerate(buckets):
+                red, shapes, n, m = _rs_start(
+                    [leaves[i] for i in idxs], q, axis)
+                if ledger is not None:
+                    rs_half = half_cost(bi, m, "rs")
+                    if pending is None:
+                        ledger.add(rs_half)
+                    else:
+                        ag_half = half_cost(pending[0], pending[5], "ag")
+                        ledger.add(overlap_cost(
+                            [ag_half, rs_half],
+                            label=f"{ag_half.label}||{rs_half.label}"))
+                if pending is not None:
+                    finish(pending, account=False)
+                pending = (bi, idxs, red, shapes, n, m)
+            if pending is not None:
+                finish(pending, account=False)
+                if ledger is not None:
+                    ledger.add(half_cost(pending[0], pending[5], "ag"))
+        else:
+            # in-order schedule; ``bucketed_fenced`` additionally makes
+            # the BSP fence between supersteps explicit (bucket k+1
+            # cannot launch early) — the sequential baseline the
+            # overlap benchmark measures against
+            fence = None
+            for bi, idxs in enumerate(buckets):
+                red, shapes, n, m = _rs_start(
+                    [leaves[i] for i in idxs], q, axis,
+                    fence=fence if method == "bucketed_fenced" else None)
+                fence = finish((bi, idxs, red, shapes, n, m))
         acc = jax.tree_util.tree_unflatten(treedef, acc_leaves)
         if mean:
             acc = jax.tree.map(lambda a: a / q, acc)

@@ -20,7 +20,8 @@ Paper primitive             This module
 
 from .attrs import CompressSpec, LPF_SYNC_DEFAULT, SyncAttributes
 from .context import LPFContext, exec_, hook, rehook
-from .cost import CostLedger, FUSED_METHODS, SuperstepCost
+from .cost import (CostLedger, FUSED_METHODS, OVERLAP_L_FRACTION,
+                   SuperstepCost, overlap_cost)
 from .errors import (LPF_ERR_FATAL, LPF_ERR_OUT_OF_MEMORY, LPF_SUCCESS,
                      LPFCapacityError, LPFError, LPFFatalError)
 from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
@@ -29,18 +30,21 @@ from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
                       LPFMachine, probe)
 from .memslot import Slot, SlotRegistry
 from .program import (OptimizedStep, ProgramCache, ProgramStep,
-                      SuperstepProgram, global_program_cache,
-                      optimize_program, program_signature,
-                      simulate_program)
-from .sync import (CacheStats, Msg, PlanCache, RoundPlan, SuperstepPlan,
-                   execute_plan, global_plan_cache, plan_cost, plan_sync,
-                   plan_signature)
+                      SuperstepProgram, dependency_cone,
+                      global_program_cache, optimize_program,
+                      program_signature, simulate_program)
+from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
+                   RoundPlan, SuperstepPlan, begin_plan,
+                   execute_overlapped, execute_plan, global_plan_cache,
+                   plan_cost, plan_sync, plan_signature)
 from . import compat
 
 __all__ = [
     "LPFContext", "exec_", "hook", "rehook",
     "SyncAttributes", "CompressSpec", "LPF_SYNC_DEFAULT",
     "CostLedger", "SuperstepCost", "FUSED_METHODS",
+    "OVERLAP_L_FRACTION", "overlap_cost", "OVERLAPPABLE_METHODS",
+    "begin_plan", "execute_overlapped", "dependency_cone",
     "LPFError", "LPFCapacityError", "LPFFatalError",
     "LPF_SUCCESS", "LPF_ERR_OUT_OF_MEMORY", "LPF_ERR_FATAL",
     "HardwareModel", "LinkModel", "LPFMachine", "probe",

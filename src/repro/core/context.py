@@ -33,8 +33,10 @@ from .cost import CostLedger, SuperstepCost
 from .errors import LPFCapacityError, LPFFatalError
 from .machine import LPFMachine, HardwareModel, TPU_V5E, probe as _probe
 from .memslot import Slot, SlotRegistry
-from .program import ProgramCache, ProgramStep, global_program_cache
-from .sync import Msg, PlanCache, execute_plan, global_plan_cache
+from .program import (ProgramCache, ProgramStep, dependency_cone,
+                      global_program_cache)
+from .sync import (Msg, PlanCache, execute_overlapped, execute_plan,
+                   global_plan_cache)
 
 __all__ = ["LPFContext", "exec_", "hook", "rehook", "LPF_ROOT_AXES"]
 
@@ -51,6 +53,17 @@ def _per_pid(value: PidFn, p: int, name: str) -> List[int]:
     if len(out) != p:
         raise LPFFatalError(f"{name} table must have length p={p}")
     return out
+
+
+class _CacheStatsView(dict):
+    """``ctx.cache_stats``: a dict of the memo layers' counter objects
+    (``plan``/``program``) with a ``reset()`` that zeroes them in place —
+    benchmarks and the replay tests measure hit/miss deltas without a
+    process restart (the cache *contents* stay warm)."""
+
+    def reset(self) -> None:
+        for stats in self.values():
+            stats.reset()
 
 
 class LPFContext:
@@ -221,10 +234,12 @@ class LPFContext:
         While a program is being recorded (:meth:`record` /
         :meth:`program`) the superstep is *deferred*: its table is
         snapshotted into the pending trace and executed at the next
-        flush (a local read/write of a touched slot, or
-        :meth:`end_record`), after whole-trace optimization — in that
-        case ``sync`` returns ``None`` and the ledger entries appear at
-        flush time."""
+        flush — a local read/write of a touched slot executes exactly
+        the slot's dependency cone (see :meth:`_flush_cone`);
+        :meth:`end_record` executes whatever remains — after trace
+        optimization (coalescing, dead-transfer elimination, batching,
+        split-phase overlap).  In that case ``sync`` returns ``None``
+        and the ledger entries appear at flush time."""
         self._require_active()
         if not label:
             prefix = next((l for l in reversed(self._rec_labels) if l), "")
@@ -302,31 +317,78 @@ class LPFContext:
                     return True
         return False
 
-    def _flush_program(self) -> None:
-        """Optimize (or fetch the cached optimization of) the pending
-        trace and execute it; the ledger gains one entry per *optimized*
-        superstep, each exactly its plan's predicted cost."""
-        if not self._rec_pending:
-            return
-        steps, self._rec_pending = self._rec_pending, []
+    def _execute_steps(self, steps: List[ProgramStep]) -> None:
+        """Optimize (or fetch the cached optimization of) one trace and
+        execute it; the ledger gains one entry per *optimized* superstep
+        — each exactly its plan's predicted cost — and one combined
+        entry (``overlap_cost`` of the members' plans) per overlap
+        group issued split-phase."""
         prog = self.program_cache.get_or_build(
             steps, self.p, self._machine(), plan_cache=self.plan_cache,
             scratch=self._scratch)
         labels = [st.label for st in steps]
-        for msgs, attrs, label, plan in prog.materialize(steps, labels):
-            cost = execute_plan(plan, self.registry, msgs, self.p,
-                                self.axes, self.pid, attrs, label,
-                                scratch=self._scratch)
+        entries = prog.materialize(steps, labels)
+        for grp in prog.groups():
+            if len(grp) == 1:
+                msgs, attrs, label, plan = entries[grp[0]]
+                cost = execute_plan(plan, self.registry, msgs, self.p,
+                                    self.axes, self.pid, attrs, label,
+                                    scratch=self._scratch)
+            else:
+                cost = execute_overlapped(
+                    [(entries[i][3], entries[i][0], entries[i][1],
+                      entries[i][2]) for i in grp],
+                    self.registry, self.p, self.axes, self.pid,
+                    scratch=self._scratch)
             self.ledger.add(cost)
-        dereg, self._rec_deferred_dereg = self._rec_deferred_dereg, []
-        for slot in dereg:
-            self.registry.deregister(slot)
+
+    def _drain_deferred_dereg(self) -> None:
+        still: List[Slot] = []
+        for slot in self._rec_deferred_dereg:
+            if self._rec_pending and self._pending_refs(slot):
+                still.append(slot)       # a deferred step still moves data
+            else:
+                self.registry.deregister(slot)
+        self._rec_deferred_dereg = still
+
+    def _flush_program(self) -> None:
+        """Execute the whole pending trace (end of recording)."""
+        if not self._rec_pending:
+            return
+        steps, self._rec_pending = self._rec_pending, []
+        self._execute_steps(steps)
+        self._drain_deferred_dereg()
+
+    def _flush_cone(self, slot: Slot, include_reads: bool) -> None:
+        """Dataflow-precise flush: execute only the pending supersteps a
+        local read (or write, with ``include_reads``) of ``slot``
+        depends on — its dependency cone, a topological slice over the
+        trace's slot-dataflow graph.  Independent supersteps stay
+        recorded across the compute barrier, keeping the
+        batching/overlap window open for later syncs."""
+        if not self._rec_pending:
+            return
+        cone = dependency_cone(self._rec_pending, slot.sid, include_reads)
+        if not cone:
+            return
+        if len(cone) == len(self._rec_pending):
+            self._flush_program()
+            return
+        cone_set = set(cone)
+        steps = [st for i, st in enumerate(self._rec_pending)
+                 if i in cone_set]
+        self._rec_pending = [st for i, st in enumerate(self._rec_pending)
+                             if i not in cone_set]
+        self._execute_steps(steps)
+        self._drain_deferred_dereg()
 
     @property
-    def cache_stats(self) -> Dict[str, Any]:
-        """Hit/miss/eviction counters of both memo layers."""
-        return {"plan": self.plan_cache.stats,
-                "program": self.program_cache.stats}
+    def cache_stats(self) -> "_CacheStatsView":
+        """Hit/miss/eviction counters of both memo layers; call
+        ``.reset()`` on the returned view to zero the counters in place
+        (the caches stay warm) for delta measurements."""
+        return _CacheStatsView(plan=self.plan_cache.stats,
+                               program=self.program_cache.stats)
 
     # ------------------------------------------------------------------
     # introspection: lpf_probe
@@ -343,23 +405,22 @@ class LPFContext:
     # local access (between supersteps)
     # ------------------------------------------------------------------
     def value(self, slot: Slot) -> jnp.ndarray:
-        # local compute is a barrier: reading a slot a recorded superstep
-        # writes flushes (and executes) the pending trace first
-        if self._rec_pending and self._pending_refs(slot, dst_only=True):
-            self._flush_program()
+        # local compute is a barrier, but a *dataflow-precise* one: a
+        # read executes only the pending supersteps in the slot's
+        # dependency cone; independent supersteps stay recorded
+        self._flush_cone(slot, include_reads=False)
         return self.registry.value(slot)
 
     def tensor(self, slot: Slot) -> jnp.ndarray:
-        if self._rec_pending and self._pending_refs(slot, dst_only=True):
-            self._flush_program()
+        self._flush_cone(slot, include_reads=False)
         return self.registry.tensor(slot)
 
     def write(self, slot: Slot, value) -> None:
         """Local compute step writing a slot (allowed between supersteps)."""
         # recorded supersteps must observe the slot as it was when they
-        # were staged; overwriting a referenced slot flushes them first
-        if self._rec_pending and self._pending_refs(slot):
-            self._flush_program()
+        # were staged; overwriting a slot flushes the cone of supersteps
+        # that read *or* write it (WAR + WAW), and only that cone
+        self._flush_cone(slot, include_reads=True)
         value = jnp.asarray(value).reshape(-1).astype(slot.dtype)
         self.registry.set_value(slot, value)
 

@@ -12,16 +12,25 @@ feeds off the same records.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from .machine import LPFMachine
 
-__all__ = ["SuperstepCost", "CostLedger", "FUSED_METHODS"]
+__all__ = ["SuperstepCost", "CostLedger", "FUSED_METHODS",
+           "OVERLAP_L_FRACTION", "overlap_cost"]
 
 #: methods that lower onto one native XLA collective (single round by
 #: construction; their wire bytes equal the collective's schedule)
 FUSED_METHODS = frozenset(
     {"fused", "fused_ag", "fused_rs", "fused_scatter", "fused_gather"})
+
+#: residual latency of issuing one *additional* overlapped superstep as a
+#: fraction of the full superstep latency ``l``.  Split-phase supersteps
+#: share one barrier, but every extra member still pays its own launch /
+#: progression overhead (pMR measures this as the cost of asynchronous
+#: progression); 1/4 of ``l`` is the engineering assumption recorded here
+#: so the overlap gate is explicit about it.
+OVERLAP_L_FRACTION = 0.25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,14 +41,45 @@ class SuperstepCost:
     total_wire_bytes: int # sum over processes of bytes on the wire
     rounds: int           # collective launches issued
     n_msgs: int           # messages in the superstep
-    method: str           # direct | bruck | valiant | fused* | noop
+    method: str           # direct | bruck | valiant | fused* | overlap[k] | noop
+    #: number of *additional* split-phase supersteps overlapped under this
+    #: one (k - 1 for a k-member overlap group; 0 for a plain superstep).
+    #: Each pays ``OVERLAP_L_FRACTION * l`` of issue latency on top of the
+    #: shared barrier.
+    overlap_extra: int = 0
 
     @property
     def is_fused(self) -> bool:
         return self.method in FUSED_METHODS
 
     def predicted_seconds(self, machine: LPFMachine) -> float:
-        return self.wire_bytes * machine.g + self.rounds * machine.l
+        return (self.wire_bytes * machine.g + self.rounds * machine.l
+                + self.overlap_extra * OVERLAP_L_FRACTION * machine.l)
+
+
+def overlap_cost(costs: Sequence[SuperstepCost],
+                 label: str = "") -> SuperstepCost:
+    """The ledger record of ``k`` split-phase supersteps issued as one
+    overlap group: their wire times hide under each other, so the
+    BSP-time-equivalent wire is ``max_i(wire_i)`` (the paper's
+    ``h_merged*g`` replaced by ``max(h_a, h_b)*g``), the shared barrier
+    costs ``max_i(rounds_i) * l``, and each member past the first adds
+    ``OVERLAP_L_FRACTION * l`` of issue latency (``l_overlap``).  Total
+    wire bytes stay the sum — overlap hides time, not traffic."""
+    costs = list(costs)
+    if not costs:
+        raise ValueError("overlap_cost of an empty group")
+    if len(costs) == 1:
+        return dataclasses.replace(costs[0], label=label)
+    return SuperstepCost(
+        label=label,
+        h_bytes=max(c.h_bytes for c in costs),
+        wire_bytes=max(c.wire_bytes for c in costs),
+        total_wire_bytes=sum(c.total_wire_bytes for c in costs),
+        rounds=max(c.rounds for c in costs),
+        n_msgs=sum(c.n_msgs for c in costs),
+        method=f"overlap[{'+'.join(c.method for c in costs)}]",
+        overlap_extra=len(costs) - 1)
 
 
 class CostLedger:

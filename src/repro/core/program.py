@@ -13,9 +13,12 @@ module lifts the plan/cache/execute architecture one level up:
   ``ctx.program()`` context manager) turns ``ctx.sync`` into a deferred
   operation: each sync snapshots its ``(message table, attrs, label)``
   into a pending trace instead of executing.  Local compute acts as a
-  barrier: reading a slot a pending superstep writes (or overwriting a
-  slot one references) flushes the trace first, so interleaved compute
-  keeps its sequential semantics.
+  *dataflow-precise* barrier: reading a slot executes exactly the
+  pending supersteps in its dependency cone (:func:`dependency_cone` —
+  the slot's writers, closed backwards under must-precede conflicts),
+  leaving independent supersteps recorded, so interleaved compute keeps
+  its sequential semantics without narrowing the batching/overlap
+  window.
 * **optimize** — :func:`optimize_program` rewrites one flushed trace:
 
   1. *coalescing* — same-``(src, dst, slot-pair)`` messages contiguous
@@ -29,7 +32,16 @@ module lifts the plan/cache/execute architecture one level up:
   3. *superstep batching* — adjacent compute-independent supersteps
      with equal attributes merge into one sync, cost-gated by the BSP
      model: merge only when ``h_merged*g + l < sum(h_i*g + l)`` (with
-     ``h``/rounds taken from the planned schedules).
+     ``h``/rounds taken from the planned schedules);
+  4. *split-phase overlap* — adjacent independent supersteps the merge
+     gate keeps separate (differing attrs, or a merged plan priced
+     higher) are grouped for overlapped issue: all members' reads and
+     collectives launch back-to-back, then all writes apply
+     (:func:`repro.core.sync.execute_overlapped`).  A k-member group is
+     priced ``max_i(h_i)g + max_i(rounds_i)l + (k-1)*l_overlap``
+     (:func:`repro.core.cost.overlap_cost`) and admitted only below the
+     sequential sum; members must commute, and valiant supersteps never
+     overlap (phase-1 scratch writes land in the start half).
 
 * **replay** — optimized traces are cached in a :class:`ProgramCache`
   keyed by the canonical program signature (slot ids renamed by first
@@ -61,15 +73,17 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .attrs import SyncAttributes
+from .cost import overlap_cost
 from .errors import LPFFatalError
 from .machine import LPFMachine
 from .memslot import Slot
-from .sync import CacheStats, Msg, PlanCache, SuperstepPlan, plan_sync
+from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
+                   SuperstepPlan, plan_sync)
 
 __all__ = [
     "ProgramStep", "OptimizedStep", "SuperstepProgram", "ProgramCache",
     "global_program_cache", "program_signature", "optimize_program",
-    "simulate_program",
+    "simulate_program", "dependency_cone",
 ]
 
 #: canonical message: (src, dst, src_slot_idx, src_off, dst_slot_idx,
@@ -113,6 +127,27 @@ class SuperstepProgram:
     n_coalesced: int         # messages removed by coalescing
     n_eliminated: int        # messages removed as dead transfers
     n_merged: int            # supersteps saved by batching
+    #: partition of ``range(len(steps))`` into overlap groups, in step
+    #: order: a group of k >= 2 adjacent compute-independent supersteps is
+    #: issued split-phase (all starts, then all dones) and ledgered as ONE
+    #: entry costing ``max_i(h_i)*g + max_i(rounds_i)*l + (k-1)*l_overlap``
+    overlap_groups: Tuple[Tuple[int, ...], ...] = ()
+    n_overlapped: int = 0    # supersteps hidden under another's wire time
+
+    def groups(self) -> Tuple[Tuple[int, ...], ...]:
+        """``overlap_groups``, defaulting to one singleton per step."""
+        if self.overlap_groups:
+            return self.overlap_groups
+        return tuple((i,) for i in range(len(self.steps)))
+
+    def predicted_seconds(self, machine: LPFMachine) -> float:
+        """BSP time of the optimized schedule, overlap priced in."""
+        total = 0.0
+        for grp in self.groups():
+            costs = [self.steps[i].plan.cost for i in grp]
+            total += (costs[0] if len(costs) == 1
+                      else overlap_cost(costs)).predicted_seconds(machine)
+        return total
 
     def materialize(self, slot_map_or_steps,
                     labels: Optional[Sequence[str]] = None
@@ -320,6 +355,61 @@ def _dead_msgs(tables: List[List[Msg]],
     return dead
 
 
+def _msgs_conflict(ma: Msg, mb: Msg) -> bool:
+    """Do two messages from different supersteps fail to commute?
+    True when either reads the other's write (RAW/WAR) or their
+    destination ranges overlap (WAW — ordering would elect the winner).
+    The single source of truth for both the cone flush's must-precede
+    relation and the overlap gate's commutation check."""
+    return (_reads_write(mb, ma) or _reads_write(ma, mb)
+            or _writes_overlap(ma, mb))
+
+
+def _must_precede(a: ProgramStep, b: ProgramStep) -> bool:
+    """Must ``a`` (staged before ``b``) still execute before ``b``?
+    True when reordering them is observable: ``b`` reads ``a``'s writes
+    (RAW), ``a`` reads ranges ``b`` writes (WAR — executing ``b`` first
+    would leak its writes into ``a``'s reads), or their destination
+    ranges overlap (WAW — arbitration order would flip)."""
+    for ma in a.msgs:
+        for mb in b.msgs:
+            if _msgs_conflict(ma, mb):
+                return True
+    return False
+
+
+def dependency_cone(steps: Sequence[ProgramStep], sid: int,
+                    include_reads: bool = False) -> List[int]:
+    """The dataflow-precise flush set: indices (sorted, ascending) of the
+    pending supersteps a local read of slot ``sid`` depends on — the
+    steps that write the slot, closed backwards under
+    :func:`_must_precede` so that executing the cone now and the
+    remaining steps later is indistinguishable from executing the whole
+    trace in order.  With ``include_reads`` (a local *write* of the
+    slot) steps that read the slot join the initial set too (they must
+    observe the pre-write value)."""
+    need: set = set()
+    for i, st in enumerate(steps):
+        for m in st.msgs:
+            if m.dst_slot.sid == sid or (include_reads
+                                         and m.src_slot.sid == sid):
+                need.add(i)
+                break
+    # backward closure only: a deferred step *after* a cone step keeps
+    # its original relative order when it flushes later, so only earlier
+    # steps can be pulled in.  Worklist form: each step enters the
+    # frontier once, so every (x, y) pair is tested at most once —
+    # O(n^2) _must_precede calls per flush, not a fixpoint re-scan.
+    frontier = sorted(need, reverse=True)
+    while frontier:
+        y = frontier.pop()
+        for x in range(y):
+            if x not in need and _must_precede(steps[x], steps[y]):
+                need.add(x)
+                frontier.append(x)
+    return sorted(need)
+
+
 def _independent(earlier: Sequence[Msg], later: Sequence[Msg],
                  reduce_op: Optional[str]) -> bool:
     """May ``later`` run in the same superstep as ``earlier``?  Requires
@@ -345,6 +435,23 @@ def _independent(earlier: Sequence[Msg], later: Sequence[Msg],
 
 def _cost_of(plan: SuperstepPlan, machine: LPFMachine) -> float:
     return plan.cost.wire_bytes * machine.g + plan.cost.rounds * machine.l
+
+
+def _can_overlap(earlier: Sequence[Msg], later: Sequence[Msg]) -> bool:
+    """May ``later`` issue split-phase alongside ``earlier``?  The two
+    supersteps must *commute*: no read of either may observe a write of
+    the other (RAW in both directions — the split-phase lowering runs
+    all reads before all writes, but commutation is what the reference
+    interpreter validates and what keeps the members order-free), and no
+    destination ranges may overlap (WAW — finish order would elect the
+    winner).  Note this is weaker than :func:`_independent`: the tables
+    are never concatenated, so each member keeps its own attributes,
+    plan and internal CRCW arbitration order."""
+    for m2 in later:
+        for m1 in earlier:
+            if _msgs_conflict(m1, m2):
+                return False
+    return True
 
 
 def optimize_program(steps: Sequence[ProgramStep], p: int,
@@ -433,6 +540,33 @@ def optimize_program(steps: Sequence[ProgramStep], p: int,
         groups.append((msgs, attrs, label, [i]))
     n_merged = len(tables) - len(groups)
 
+    # (4) overlap: adjacent independent supersteps the merge gate kept
+    # separate (differing attrs, or a merged plan the model prices
+    # higher) are issued split-phase instead — all starts, then all
+    # dones — and priced max(h_i)*g + max(rounds_i)*l + (k-1)*l_overlap.
+    # Cost-gated like every rewrite: a group only grows while the
+    # overlapped time is predicted below the sequential sum.
+    group_plans = [plan_of(msgs, attrs) for msgs, attrs, _, _ in groups]
+    ogroups: List[List[int]] = []
+    for j, (msgs, attrs, _, _) in enumerate(groups):
+        if ogroups and group_plans[j].method in OVERLAPPABLE_METHODS:
+            cur = ogroups[-1]
+            members_ok = all(
+                group_plans[i].method in OVERLAPPABLE_METHODS
+                and _can_overlap(groups[i][0], msgs) for i in cur)
+            if members_ok:
+                seq = sum(group_plans[i].cost.predicted_seconds(machine)
+                          for i in cur) \
+                    + group_plans[j].cost.predicted_seconds(machine)
+                grouped = overlap_cost(
+                    [group_plans[i].cost for i in cur]
+                    + [group_plans[j].cost]).predicted_seconds(machine)
+                if grouped < seq:
+                    cur.append(j)
+                    continue
+        ogroups.append([j])
+    n_overlapped = len(groups) - len(ogroups)
+
     _, _, canon_key = _slot_canon()
     # canonical indices must follow the *raw* trace's first-occurrence
     # order (what trace_slot_map of a replayed trace reproduces), not the
@@ -443,18 +577,20 @@ def optimize_program(steps: Sequence[ProgramStep], p: int,
             canon_key(m.dst_slot)
 
     opt_steps = []
-    for msgs, attrs, label, src_idx in groups:
+    for (msgs, attrs, label, src_idx), plan in zip(groups, group_plans):
         table = tuple((m.src, m.dst, canon_key(m.src_slot), m.src_off,
                        canon_key(m.dst_slot), m.dst_off, m.size, m.origin)
                       for m in msgs)
         opt_steps.append(OptimizedStep(
             table=table, attrs=attrs, label=label,
-            plan=plan_of(msgs, attrs), merged_from=tuple(src_idx),
+            plan=plan, merged_from=tuple(src_idx),
             unchanged=len(src_idx) == 1 and not modified[src_idx[0]]))
     return SuperstepProgram(
         p=p, steps=tuple(opt_steps), n_recorded=len(steps),
         n_coalesced=n_coalesced, n_eliminated=n_eliminated,
-        n_merged=n_merged)
+        n_merged=n_merged,
+        overlap_groups=tuple(tuple(g) for g in ogroups),
+        n_overlapped=n_overlapped)
 
 
 # ==========================================================================

@@ -64,21 +64,22 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
 from .attrs import SyncAttributes
-from .cost import SuperstepCost
+from .cost import SuperstepCost, overlap_cost
 from .errors import LPFFatalError
 from .memslot import Slot, SlotRegistry
 
 __all__ = [
     "Msg", "RoundPlan", "SuperstepPlan", "PlanCache", "CacheStats",
-    "plan_sync", "plan_signature", "execute_plan", "execute_sync",
-    "plan_cost", "global_plan_cache",
+    "plan_sync", "plan_signature", "begin_plan", "execute_plan",
+    "execute_overlapped", "execute_sync", "plan_cost",
+    "global_plan_cache", "OVERLAPPABLE_METHODS",
 ]
 
 AxisNames = Tuple[str, ...]
@@ -759,6 +760,12 @@ class CacheStats:
         """Planning passes actually run (== misses)."""
         return self.misses
 
+    def reset(self) -> None:
+        """Zero the counters in place (the cache contents stay warm) —
+        benchmarks and replay tests measure hit/miss deltas without a
+        process restart or a cold cache."""
+        self.hits = self.misses = self.evictions = 0
+
 
 class PlanCache:
     """LRU memo of :class:`SuperstepPlan` keyed by :func:`plan_signature`.
@@ -894,19 +901,18 @@ def _ppermute(x, axes: AxisNames, perm: List[Tuple[int, int]]):
     return lax.ppermute(x, axes if len(axes) > 1 else axes[0], perm)
 
 
-def _execute_direct(registry: SlotRegistry, msgs: Sequence[Msg],
-                    rounds: Sequence[RoundPlan], p: int, axes: AxisNames,
-                    myid, attrs: SyncAttributes,
-                    reduce_op: Optional[str] = None) -> None:
-    """Lower planned ``direct`` rounds: one ``ppermute`` per round.
-
-    All payloads are extracted from the *pre-sync* slot values before any
-    write is applied (LPF reads observe the pre-superstep state).  With
-    ``reduce_op``, deliveries that overlap earlier deliveries of this
-    superstep combine elementwise instead of overwriting."""
+def _direct_begin(registry: SlotRegistry, msgs: Sequence[Msg],
+                  rounds: Sequence[RoundPlan], p: int, axes: AxisNames,
+                  myid, attrs: SyncAttributes,
+                  reduce_op: Optional[str] = None) -> Callable[[], None]:
+    """Split-phase lowering of planned ``direct`` rounds: the *start*
+    phase extracts every payload from the pre-sync slot values (LPF reads
+    observe the pre-superstep state) and issues one ``ppermute`` per
+    round; the returned *finish* closure applies the ordered deliveries.
+    With ``reduce_op``, deliveries that overlap earlier deliveries of
+    this superstep combine elementwise instead of overwriting."""
     reduce_fn = _REDUCE_FNS[reduce_op] if reduce_op is not None else None
-    written: Dict[int, jnp.ndarray] = {}   # dst sid -> delivered mask
-    # ---- extraction (reads observe pre-sync values) ----
+    # ---- start: extraction (reads observe pre-sync values) ----
     extracted: List[jnp.ndarray] = []
     scales: List[Optional[jnp.ndarray]] = []
     for rd in rounds:
@@ -920,7 +926,9 @@ def _execute_direct(registry: SlotRegistry, msgs: Sequence[Msg],
         extracted.append(payload)
         scales.append(scale)
 
-    # ---- exchange + ordered writes ----
+    # ---- start: the exchanges (no slot writes yet) ----
+    deliveries: List[Tuple[Slot, jnp.ndarray, np.ndarray, np.ndarray,
+                           np.ndarray]] = []
     for rd, payload, scale in zip(rounds, extracted, scales):
         rd_msgs = [msgs[i] for i in rd.msg_idx]
         remote = [(m.src, m.dst) for m in rd_msgs if m.src != m.dst]
@@ -953,29 +961,47 @@ def _execute_direct(registry: SlotRegistry, msgs: Sequence[Msg],
             offs[m.dst] = m.dst_off
             sizes[m.dst] = m.size
             mask[m.dst] = 1
-        if reduce_fn is None:
-            registry.set_value(dst_slot, _scatter_payload(
-                registry.value(dst_slot), arrived, offs, sizes, mask, myid))
-        else:
-            wr = written.get(dst_slot.sid)
-            if wr is None:
-                wr = jnp.zeros(dst_slot.size, jnp.bool_)
-            val, wr = _scatter_payload_acc(
-                registry.value(dst_slot), wr, arrived, offs, sizes, mask,
-                myid, reduce_fn)
-            written[dst_slot.sid] = wr
-            registry.set_value(dst_slot, val)
+        deliveries.append((dst_slot, arrived, offs, sizes, mask))
+
+    def finish() -> None:
+        written: Dict[int, jnp.ndarray] = {}   # dst sid -> delivered mask
+        for dst_slot, arrived, offs, sizes, mask in deliveries:
+            if reduce_fn is None:
+                registry.set_value(dst_slot, _scatter_payload(
+                    registry.value(dst_slot), arrived, offs, sizes, mask,
+                    myid))
+            else:
+                wr = written.get(dst_slot.sid)
+                if wr is None:
+                    wr = jnp.zeros(dst_slot.size, jnp.bool_)
+                val, wr = _scatter_payload_acc(
+                    registry.value(dst_slot), wr, arrived, offs, sizes,
+                    mask, myid, reduce_fn)
+                written[dst_slot.sid] = wr
+                registry.set_value(dst_slot, val)
+
+    return finish
 
 
-def _execute_bruck(registry: SlotRegistry, msgs: Sequence[Msg],
-                   plan: SuperstepPlan, p: int, axes: AxisNames,
-                   myid) -> None:
-    """Lower planned Bruck rounds.
+def _execute_direct(registry: SlotRegistry, msgs: Sequence[Msg],
+                    rounds: Sequence[RoundPlan], p: int, axes: AxisNames,
+                    myid, attrs: SyncAttributes,
+                    reduce_op: Optional[str] = None) -> None:
+    _direct_begin(registry, msgs, rounds, p, axes, myid, attrs,
+                  reduce_op)()
+
+
+def _bruck_begin(registry: SlotRegistry, msgs: Sequence[Msg],
+                 plan: SuperstepPlan, p: int, axes: AxisNames,
+                 myid) -> Callable[[], None]:
+    """Split-phase lowering of planned Bruck rounds.
 
     Row ``r`` of the working matrix holds the payload this process
     currently carries whose *original* relative distance (dst - origin
     mod p) is ``r``.  All blocks of equal original distance move through
-    identical hop sequences, so row sets per round are static."""
+    identical hop sequences, so row sets per round are static.  The start
+    phase runs the log-rounds exchange; the finish closure applies the
+    deliveries."""
     w = plan.bruck_w
     m0 = msgs[0]
     src_slot, dst_slot = m0.src_slot, m0.dst_slot
@@ -1003,63 +1029,80 @@ def _execute_bruck(registry: SlotRegistry, msgs: Sequence[Msg],
         sub = _ppermute(sub, axes, perm)
         buf = buf.at[np.asarray(rows)].set(sub)
 
-    # delivery: row r arrived from origin (me - r) % p; write at the
-    # receiver-side offset table entries.
-    out = registry.value(dst_slot)
-    my_dst_off = jnp.asarray(dst_off)[myid]                   # [p]
-    my_sizes = jnp.asarray(sizes)                             # [p(src), p(rel)]
-    origin = (myid - jnp.arange(p)) % p
-    my_len = my_sizes[origin, jnp.arange(p)]                  # [p]
-    my_mask = jnp.asarray(mask)[origin, jnp.arange(p)]        # [p]
-    # apply rows in ascending origin pid order for CRCW determinism
-    for r in range(p):
-        keep = (jnp.arange(w) < my_len[r]) & (my_mask[r] > 0)
-        tgt = my_dst_off[r] + jnp.arange(w)
-        cur = out.at[tgt].get(mode="fill",
-                              fill_value=0)
-        out = out.at[tgt].set(jnp.where(keep, buf[r], cur), mode="drop")
-    registry.set_value(dst_slot, out)
+    def finish() -> None:
+        # delivery: row r arrived from origin (me - r) % p; write at the
+        # receiver-side offset table entries.
+        out = registry.value(dst_slot)
+        my_dst_off = jnp.asarray(dst_off)[myid]               # [p]
+        my_sizes = jnp.asarray(sizes)                         # [p(src), p(rel)]
+        origin = (myid - jnp.arange(p)) % p
+        my_len = my_sizes[origin, jnp.arange(p)]              # [p]
+        my_mask = jnp.asarray(mask)[origin, jnp.arange(p)]    # [p]
+        # apply rows in ascending origin pid order for CRCW determinism
+        for r in range(p):
+            keep = (jnp.arange(w) < my_len[r]) & (my_mask[r] > 0)
+            tgt = my_dst_off[r] + jnp.arange(w)
+            cur = out.at[tgt].get(mode="fill",
+                                  fill_value=0)
+            out2 = out.at[tgt].set(jnp.where(keep, buf[r], cur),
+                                   mode="drop")
+            out = out2
+        registry.set_value(dst_slot, out)
+
+    return finish
 
 
-def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
-                 msgs: Sequence[Msg], p: int, axes: AxisNames, myid,
-                 attrs: SyncAttributes, label: str,
-                 scratch: Optional[Slot] = None) -> SuperstepCost:
-    """Phase (3): lower ``plan`` against the current slot values.
+def begin_plan(plan: SuperstepPlan, registry: SlotRegistry,
+               msgs: Sequence[Msg], p: int, axes: AxisNames, myid,
+               attrs: SyncAttributes,
+               scratch: Optional[Slot] = None) -> Callable[[], None]:
+    """Phase (3), split-phase: issue the superstep's reads and collectives
+    (the *start* half) and return a finish closure that applies its slot
+    writes (the *done* half).
 
-    ``msgs`` must be the table the plan was built from, or any table with
-    the same :func:`plan_signature` (the cache guarantees this).  Mutates
-    registry values; returns the superstep's ledger entry — identical to
-    the plan's predicted cost, with the label attached."""
+    The contract that makes overlap legal: the start half reads source
+    payloads from the current slot values and launches the exchanges, but
+    performs **no** slot writes; every destination-slot read and write
+    happens inside the returned closure.  :func:`execute_overlapped` runs
+    all starts of an overlap group before any finish, so every member
+    observes the group-entry state — exactly the semantics of independent
+    supersteps whose order cannot matter.  (``valiant`` is the exception:
+    its phase-1 scratch writes land in the start half, which is why the
+    optimizer never overlaps valiant supersteps.)"""
     if plan.method == "noop":
-        return plan.cost_with_label(label)
+        return lambda: None
 
     if plan.method == "seq":
         reduce_fn = _REDUCE_FNS[plan.reduce_op] if plan.reduce_op else None
-        written: Dict[int, np.ndarray] = {}   # static masks: p == 1
         # extract every payload before any write lands (LPF reads
-        # observe the pre-superstep state, exactly as _execute_direct)
+        # observe the pre-superstep state, exactly as the direct path)
         pre = {m.src_slot.sid: registry.value(m.src_slot)
                for i in plan.seq_order for m in (msgs[i],)}
         chunks = [lax.dynamic_slice(pre[msgs[i].src_slot.sid],
                                     (msgs[i].src_off,), (msgs[i].size,))
                   for i in plan.seq_order]
-        for i, chunk in zip(plan.seq_order, chunks):
-            m = msgs[i]
-            dst = registry.value(m.dst_slot)
-            if reduce_fn is not None:
-                wr = written.setdefault(m.dst_slot.sid,
-                                        np.zeros(m.dst_slot.size, bool))
-                seg = wr[m.dst_off:m.dst_off + m.size].copy()
-                if seg.any():
-                    cur = lax.dynamic_slice(dst, (m.dst_off,), (m.size,))
-                    chunk = jnp.where(jnp.asarray(seg),
-                                      reduce_fn(cur, chunk), chunk)
-                wr[m.dst_off:m.dst_off + m.size] = True
-            registry.set_value(m.dst_slot,
-                               lax.dynamic_update_slice(dst, chunk,
-                                                        (m.dst_off,)))
-        return plan.cost_with_label(label)
+
+        def finish_seq() -> None:
+            written: Dict[int, np.ndarray] = {}   # static masks: p == 1
+            for i, chunk in zip(plan.seq_order, chunks):
+                m = msgs[i]
+                dst = registry.value(m.dst_slot)
+                piece = chunk
+                if reduce_fn is not None:
+                    wr = written.setdefault(m.dst_slot.sid,
+                                            np.zeros(m.dst_slot.size, bool))
+                    seg = wr[m.dst_off:m.dst_off + m.size].copy()
+                    if seg.any():
+                        cur = lax.dynamic_slice(dst, (m.dst_off,),
+                                                (m.size,))
+                        piece = jnp.where(jnp.asarray(seg),
+                                          reduce_fn(cur, piece), piece)
+                    wr[m.dst_off:m.dst_off + m.size] = True
+                registry.set_value(m.dst_slot,
+                                   lax.dynamic_update_slice(dst, piece,
+                                                            (m.dst_off,)))
+
+        return finish_seq
 
     if plan.method == "fused_rs":
         w = plan.fused_w
@@ -1076,10 +1119,13 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
             y = (jnp.max if plan.reduce_op == "max" else jnp.min)(
                 contrib, axis=0)
         off = jnp.asarray(np.asarray(plan.rs_dst_off, np.int32))[myid]
-        dst = registry.value(dst_slot)
-        registry.set_value(dst_slot, lax.dynamic_update_slice(
-            dst, y.astype(dst_slot.dtype), (off,)))
-        return plan.cost_with_label(label)
+
+        def finish_rs() -> None:
+            dst = registry.value(dst_slot)
+            registry.set_value(dst_slot, lax.dynamic_update_slice(
+                dst, y.astype(dst_slot.dtype), (off,)))
+
+        return finish_rs
 
     if plan.method == "fused_scatter":
         w = plan.fused_w
@@ -1094,12 +1140,15 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
         chunk = y[plan.fused_root]
         off = jnp.asarray(np.asarray(plan.sc_dst_off, np.int32))[myid]
         active = jnp.asarray(np.asarray(plan.sc_mask, np.int8))[myid] > 0
-        dst = registry.value(dst_slot)
-        cur = lax.dynamic_slice(dst, (off,), (w,))
-        new = jnp.where(active, chunk.astype(dst_slot.dtype), cur)
-        registry.set_value(dst_slot,
-                           lax.dynamic_update_slice(dst, new, (off,)))
-        return plan.cost_with_label(label)
+
+        def finish_sc() -> None:
+            dst = registry.value(dst_slot)
+            cur = lax.dynamic_slice(dst, (off,), (w,))
+            new = jnp.where(active, chunk.astype(dst_slot.dtype), cur)
+            registry.set_value(dst_slot,
+                               lax.dynamic_update_slice(dst, new, (off,)))
+
+        return finish_sc
 
     if plan.method == "fused_gather":
         w = plan.fused_w
@@ -1112,17 +1161,21 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
         else:
             x = _gather_payload(sval, src_off, w, myid, None)
         axis = axes if len(axes) > 1 else axes[0]
-        y = lax.all_gather(x, axis, tiled=True)          # [p * w]
-        dst = registry.value(dst_slot)
-        if not plan.g_has_self:
-            # root keeps its own chunk: no root -> root message was staged
-            own = lax.dynamic_slice(dst, (plan.fused_root * w,), (w,))
-            y = lax.dynamic_update_slice(y, own, (plan.fused_root * w,))
-        is_root = myid == plan.fused_root
-        new = jnp.where(is_root, y.astype(dst_slot.dtype), dst[: p * w])
-        registry.set_value(dst_slot,
-                           lax.dynamic_update_slice(dst, new, (0,)))
-        return plan.cost_with_label(label)
+        y_gathered = lax.all_gather(x, axis, tiled=True)     # [p * w]
+
+        def finish_ga() -> None:
+            y = y_gathered
+            dst = registry.value(dst_slot)
+            if not plan.g_has_self:
+                # root keeps its own chunk: no root -> root msg was staged
+                own = lax.dynamic_slice(dst, (plan.fused_root * w,), (w,))
+                y = lax.dynamic_update_slice(y, own, (plan.fused_root * w,))
+            is_root = myid == plan.fused_root
+            new = jnp.where(is_root, y.astype(dst_slot.dtype), dst[: p * w])
+            registry.set_value(dst_slot,
+                               lax.dynamic_update_slice(dst, new, (0,)))
+
+        return finish_ga
 
     if plan.method == "fused_ag":
         w = plan.fused_w
@@ -1136,19 +1189,24 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
             x = _gather_payload(sval, src_off, w, myid, None)
         axis = axes if len(axes) > 1 else axes[0]
         x, scale = _maybe_compress(x, attrs)
-        y = lax.all_gather(x, axis, tiled=True)
+        y_gathered = lax.all_gather(x, axis, tiled=True)
         if scale is not None:
             scales = lax.all_gather(scale, axis, tiled=False)  # [p]
-            y = (y.reshape(p, w).astype(jnp.float32)
-                 * scales[:, None]).reshape(p * w).astype(src_slot.dtype)
-        dst = registry.value(dst_slot)
-        if plan.ag_exclude_self:
-            # exclude-self variant: keep own chunk as-is
-            own = lax.dynamic_slice(dst, (myid * w,), (w,))
-            y = lax.dynamic_update_slice(y, own, (myid * w,))
-        registry.set_value(dst_slot,
-                           lax.dynamic_update_slice(dst, y, (0,)))
-        return plan.cost_with_label(label)
+            y_gathered = (y_gathered.reshape(p, w).astype(jnp.float32)
+                          * scales[:, None]).reshape(p * w).astype(
+                              src_slot.dtype)
+
+        def finish_ag() -> None:
+            y = y_gathered
+            dst = registry.value(dst_slot)
+            if plan.ag_exclude_self:
+                # exclude-self variant: keep own chunk as-is
+                own = lax.dynamic_slice(dst, (myid * w,), (w,))
+                y = lax.dynamic_update_slice(y, own, (myid * w,))
+            registry.set_value(dst_slot,
+                               lax.dynamic_update_slice(dst, y, (0,)))
+
+        return finish_ag
 
     if plan.method == "fused":
         w = plan.fused_w
@@ -1170,10 +1228,13 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
             y = (y.astype(jnp.float32) * scales[:, None]).astype(
                 src_slot.dtype)
         y = y.reshape(p * w)
-        dst = registry.value(dst_slot)
-        registry.set_value(dst_slot,
-                           lax.dynamic_update_slice(dst, y, (0,)))
-        return plan.cost_with_label(label)
+
+        def finish_fused() -> None:
+            dst = registry.value(dst_slot)
+            registry.set_value(dst_slot,
+                               lax.dynamic_update_slice(dst, y, (0,)))
+
+        return finish_fused
 
     if plan.method == "valiant":
         if scratch is None:
@@ -1182,19 +1243,63 @@ def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
                                        plan.valiant_via, plan.valiant_off,
                                        scratch)
         sub = attrs.replace(method="direct")
+        # phase 2 reads the scratch slot phase 1 writes — an internal
+        # barrier, so phase 1 completes inside the start half (the
+        # optimizer's overlap gate excludes valiant for exactly this)
         _execute_direct(registry, ph1, plan.valiant_phase1, p, axes, myid,
                         sub)
-        _execute_direct(registry, ph2, plan.valiant_phase2, p, axes, myid,
-                        sub)
-        return plan.cost_with_label(label)
+        return _direct_begin(registry, ph2, plan.valiant_phase2, p, axes,
+                             myid, sub)
 
     if plan.method == "bruck":
-        _execute_bruck(registry, msgs, plan, p, axes, myid)
-        return plan.cost_with_label(label)
+        return _bruck_begin(registry, msgs, plan, p, axes, myid)
 
-    _execute_direct(registry, msgs, plan.rounds, p, axes, myid, attrs,
-                    reduce_op=plan.reduce_op)
+    return _direct_begin(registry, msgs, plan.rounds, p, axes, myid, attrs,
+                         reduce_op=plan.reduce_op)
+
+
+#: methods the overlap rewrite may schedule split-phase: their start
+#: half performs no slot writes (valiant's phase-1 scratch writes land in
+#: start, so two overlapped valiant supersteps would race the scratch)
+OVERLAPPABLE_METHODS = frozenset(
+    {"noop", "seq", "direct", "bruck", "fused", "fused_ag", "fused_rs",
+     "fused_scatter", "fused_gather"})
+
+
+def execute_plan(plan: SuperstepPlan, registry: SlotRegistry,
+                 msgs: Sequence[Msg], p: int, axes: AxisNames, myid,
+                 attrs: SyncAttributes, label: str,
+                 scratch: Optional[Slot] = None) -> SuperstepCost:
+    """Phase (3): lower ``plan`` against the current slot values.
+
+    ``msgs`` must be the table the plan was built from, or any table with
+    the same :func:`plan_signature` (the cache guarantees this).  Mutates
+    registry values; returns the superstep's ledger entry — identical to
+    the plan's predicted cost, with the label attached."""
+    begin_plan(plan, registry, msgs, p, axes, myid, attrs,
+               scratch=scratch)()
     return plan.cost_with_label(label)
+
+
+def execute_overlapped(items: Sequence[Tuple[SuperstepPlan, Sequence[Msg],
+                                             SyncAttributes, str]],
+                       registry: SlotRegistry, p: int, axes: AxisNames,
+                       myid, scratch: Optional[Slot] = None
+                       ) -> SuperstepCost:
+    """Issue one overlap group of independent supersteps split-phase: all
+    *start* halves first (every member reads the group-entry slot state
+    and launches its collectives back-to-back — the double-buffered
+    chain XLA's scheduler can pipeline), then all *done* halves in
+    program order.  Returns the group's single ledger entry, by
+    construction :func:`repro.core.cost.overlap_cost` of the members'
+    planned costs."""
+    finishes = [begin_plan(plan, registry, list(msgs), p, axes, myid,
+                           attrs, scratch=scratch)
+                for plan, msgs, attrs, _ in items]
+    for finish in finishes:
+        finish()
+    return overlap_cost([plan.cost for plan, _, _, _ in items],
+                        label="||".join(label for _, _, _, label in items))
 
 
 # ==========================================================================

@@ -34,6 +34,37 @@ from repro.launch.mesh import dp_axes_of, model_axis_of
 __all__ = ["TrainStep", "build_train_step", "ServeStep", "build_serve_step"]
 
 
+def _split_scan_layers(grads: dict, cfg: ModelConfig):
+    """Split stacked scan-group gradient leaves ``[L, ...]`` into L
+    per-layer subtrees, so bucket boundaries (``bucketize`` packs leaves
+    greedily, never splitting one) can fall on layer boundaries — the
+    granularity at which the backward pass actually materialises
+    gradients.  Returns the split tree plus the set of keys to restack.
+    Leaves whose leading dim is not the group's repeat count (or groups
+    of one repeat) pass through unsplit."""
+    repeats = {f"dec_{g.name}": g.repeats for g in cfg.groups}
+    repeats.update({f"enc_{g.name}": g.repeats for g in cfg.encoder_groups})
+    split, split_keys = {}, set()
+    for key, sub in grads.items():
+        r = repeats.get(key, 0)
+        if r > 1:
+            leaves = jax.tree_util.tree_flatten(sub)[0]
+            if leaves and all(l.ndim >= 1 and l.shape[0] == r
+                              for l in leaves):
+                split[key] = [jax.tree.map(lambda l: l[i], sub)
+                              for i in range(r)]
+                split_keys.add(key)
+                continue
+        split[key] = sub
+    return split, split_keys
+
+
+def _restack_scan_layers(split: dict, split_keys) -> dict:
+    return {key: jax.tree.map(lambda *xs: jnp.stack(xs), *sub)
+            if key in split_keys else sub
+            for key, sub in split.items()}
+
+
 @dataclasses.dataclass
 class TrainStep:
     """Compiled pieces + specs (also consumed by dryrun/roofline)."""
@@ -140,14 +171,32 @@ def build_train_step(cfg: ModelConfig, mesh, *,
         def pod_body(params, opt, batch):
             loss, grads = loss_and_grads(params, batch, rt_pod,
                                          constrain=False)
-            # default ``auto`` picks bucketed rs+ag pairs when
-            # ``grad_bucket_bytes`` is set, one fused reduce-scatter+
+            # default ``auto`` picks the overlapped bucket pipeline when
+            # ``grad_bucket_bytes`` is set (bucket k+1's reduce-scatter
+            # under bucket k's all-gather), one fused reduce-scatter+
             # all-gather pair for uncompressed gradients otherwise, and
             # lax.psum rings under compression
-            grads = pod_allreduce(grads, npods, "pod", attrs=sync_attrs,
-                                  mean=True, ledger=ledger,
-                                  method=grad_sync_method,
-                                  bucket_bytes=grad_bucket_bytes)
+            bucketing = grad_bucket_bytes is not None and \
+                grad_sync_method in ("auto", "bucketed", "bucketed_fenced",
+                                     "bucketed_overlap")
+            if bucketing:
+                # thread bucket boundaries through the scan-layer
+                # structure: stacked [L, ...] gradient leaves split into
+                # per-layer leaves so buckets align with the layers the
+                # backward pass produces one by one
+                gsplit, keys = _split_scan_layers(grads, cfg)
+                gsplit = pod_allreduce(gsplit, npods, "pod",
+                                       attrs=sync_attrs, mean=True,
+                                       ledger=ledger,
+                                       method=grad_sync_method,
+                                       bucket_bytes=grad_bucket_bytes)
+                grads = _restack_scan_layers(gsplit, keys)
+            else:
+                grads = pod_allreduce(grads, npods, "pod",
+                                      attrs=sync_attrs, mean=True,
+                                      ledger=ledger,
+                                      method=grad_sync_method,
+                                      bucket_bytes=grad_bucket_bytes)
             loss = jax.lax.pmean(loss, "pod")
             params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
             metrics["loss"] = loss

@@ -99,12 +99,73 @@ def test_bucketed_grad_sync_hlo_and_ledger(mesh8):
 
 @pytest.mark.slow
 def test_bucketed_auto_selection(mesh8):
-    """``method='auto'`` rides bucketed when bucket_bytes is given."""
+    """``method='auto'`` rides the overlapped bucket pipeline when
+    bucket_bytes is given."""
     _, _, ledger = _compile_sync(mesh8, "auto", BUCKET_BYTES)
-    assert ledger.supersteps == 2
-    assert all(r.method == "bucketed" for r in ledger.records)
+    # 2 buckets -> 3 schedule entries: [rs0][ag0||rs1][ag1]
+    assert ledger.supersteps == 3
+    assert all(r.method == "bucketed_overlap"
+               or r.method.startswith("overlap[")
+               for r in ledger.records)
     _, _, ledger2 = _compile_sync(mesh8, "auto", None)
     assert ledger2.supersteps == 1 and ledger2.records[0].method == "rs+ag"
+
+
+@pytest.mark.slow
+def test_bucketed_overlap_matches_sync_bit_for_bit(mesh8):
+    """The overlapped pipeline is a pure scheduling change: same HLO
+    collective counts (for the plain and fenced baselines alike), same
+    total wire on the flat ledger, identical results — but the ledger
+    records the overlapped schedule: B+1 entries for B buckets
+    ([rs0][ag||rs]...[ag]), overlap groups priced by ``overlap_cost``,
+    and a strictly smaller time-equivalent wire."""
+    n_buckets = 2
+    fn_s, compiled_s, ledger_s = _compile_sync(mesh8, "bucketed",
+                                               BUCKET_BYTES)
+    fn_f, compiled_f, ledger_f = _compile_sync(mesh8, "bucketed_fenced",
+                                               BUCKET_BYTES)
+    fn_o, compiled_o, ledger_o = _compile_sync(mesh8, "bucketed_overlap",
+                                               BUCKET_BYTES)
+    stats_s = parse_collectives(compiled_s.as_text())
+    stats_f = parse_collectives(compiled_f.as_text())
+    stats_o = parse_collectives(compiled_o.as_text())
+    for kind in ("reduce-scatter", "all-gather"):
+        assert stats_o.count_by_kind.get(kind, 0) == \
+            stats_s.count_by_kind.get(kind, 0) == \
+            stats_f.count_by_kind.get(kind, 0) == n_buckets
+    # flat totals agree: overlap hides time, not traffic
+    assert ledger_o.total_wire_bytes == ledger_s.total_wire_bytes \
+        == ledger_f.total_wire_bytes
+    # the overlapped schedule: B+1 superstep entries, middle ones
+    # overlap groups, time-equivalent wire strictly below sequential
+    assert ledger_s.supersteps == ledger_f.supersteps == n_buckets
+    assert ledger_o.supersteps == n_buckets + 1
+    assert ledger_o.records[0].method == "bucketed_overlap"
+    assert all(r.method.startswith("overlap[") and r.overlap_extra == 1
+               for r in ledger_o.records[1:-1])
+    assert ledger_o.wire_bytes < ledger_s.wire_bytes
+    out_s, out_f, out_o = (fn(_toy_grads()) for fn in (fn_s, fn_f, fn_o))
+    for k in out_s:
+        np.testing.assert_array_equal(np.asarray(out_s[k]),
+                                      np.asarray(out_o[k]))
+        np.testing.assert_array_equal(np.asarray(out_s[k]),
+                                      np.asarray(out_f[k]))
+
+
+@pytest.mark.fast
+def test_bucketize_validation():
+    """Satellite: clear errors for non-positive bucket sizes; zero-byte
+    leaves ride no bucket instead of emitting empty ones."""
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        bucketize([256], 0)
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        bucketize([256], -4)
+    with pytest.raises(ValueError, match="negative"):
+        bucketize([256, -1], 512)
+    # zero-byte leaves are skipped, never wrapped in empty buckets
+    assert bucketize([0, 256, 0, 256, 0], 512) == [[1, 3]]
+    assert bucketize([0, 0], 512) == []
+    assert bucketize([0, 256, 0], None) == [[1]]
 
 
 @pytest.mark.slow

@@ -1,0 +1,287 @@
+"""Dataflow-precise flush: a local read of a slot executes exactly the
+pending supersteps in its dependency cone — the topological slice of the
+trace's slot-dataflow graph — leaving independent supersteps recorded
+across the compute barrier.
+
+Pure-level tests drive :func:`repro.core.dependency_cone` and the numpy
+reference interpreter (executing the cone first, then the remainder,
+must be bit-identical to in-order execution); the XLA tests check the
+real ``ctx.program()`` path: ledger superstep counts equal cone sizes,
+the deferred remainder still flushes at ``end_record``, and post-flush
+replay hits the program cache.  Property tests run under hypothesis
+when available and fall back to a fixed seed sweep otherwise.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (LPF_SYNC_DEFAULT, Msg, ProgramStep, Slot,
+                        SyncAttributes, dependency_cone, simulate_program)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.fast
+
+
+def table_property(fn):
+    if HAVE_HYPOTHESIS:
+        return settings(deadline=None)(
+            given(st.integers(0, 2**31 - 1))(fn))
+    return pytest.mark.parametrize("seed", range(60))(fn)
+
+
+def make_slot(sid, size, dtype="int32", kind="global"):
+    return Slot(sid=sid, name=f"s{sid}", size=size, dtype=np.dtype(dtype),
+                kind=kind, orig_shape=(size,))
+
+
+# ---------------------------------------------------------------------------
+# cone computation
+# ---------------------------------------------------------------------------
+
+def test_cone_contains_writers_only():
+    A, B, C, D = (make_slot(i, 16) for i in range(1, 5))
+    steps = [
+        ProgramStep((Msg(0, 1, A, 0, B, 0, 4),), LPF_SYNC_DEFAULT, "w_b"),
+        ProgramStep((Msg(2, 3, C, 0, D, 0, 4),), LPF_SYNC_DEFAULT, "w_d"),
+        ProgramStep((Msg(1, 2, B, 8, A, 8, 4),), LPF_SYNC_DEFAULT, "r_b"),
+    ]
+    # a read of B depends on its writer only; the independent C->D
+    # superstep and the step merely *reading* B stay recorded
+    assert dependency_cone(steps, sid=2) == [0]
+    # a read of D: only its writer
+    assert dependency_cone(steps, sid=4) == [1]
+    # a *write* of B must also flush B's readers (WAR)
+    assert dependency_cone(steps, sid=2, include_reads=True) == [0, 2]
+
+
+def test_cone_transitive_raw_chain():
+    A, B, C, D = (make_slot(i, 16) for i in range(1, 5))
+    steps = [
+        ProgramStep((Msg(0, 1, A, 0, B, 0, 4),), LPF_SYNC_DEFAULT, "a2b"),
+        ProgramStep((Msg(1, 2, B, 0, C, 0, 4),), LPF_SYNC_DEFAULT, "b2c"),
+        ProgramStep((Msg(2, 3, C, 0, D, 0, 4),), LPF_SYNC_DEFAULT, "c2d"),
+    ]
+    # reading D pulls the whole chain (c2d reads C written by b2c, ...)
+    assert dependency_cone(steps, sid=4) == [0, 1, 2]
+    # reading C needs only the first two
+    assert dependency_cone(steps, sid=3) == [0, 1]
+
+
+def test_cone_waw_and_war_ordering():
+    A, B = make_slot(1, 16), make_slot(2, 16)
+    # two writes overlapping in B: flushing the later writer must drag
+    # the earlier one along (arbitration order), even across a gap
+    steps = [
+        ProgramStep((Msg(0, 1, A, 0, B, 0, 8),), LPF_SYNC_DEFAULT, "w1"),
+        ProgramStep((Msg(3, 2, A, 8, A, 0, 4),),
+                    SyncAttributes(reduce_op="sum"), "noise"),
+        ProgramStep((Msg(2, 1, A, 8, B, 4, 8),), LPF_SYNC_DEFAULT, "w2"),
+    ]
+    cone = dependency_cone(steps, sid=2)
+    assert 0 in cone and 2 in cone
+    # the unrelated accumulate into A stays pending... unless A is read
+    assert 1 not in cone or steps[1].msgs[0].dst_slot.sid == 1
+
+
+def test_cone_empty_when_slot_untouched():
+    A, B = make_slot(1, 16), make_slot(2, 16)
+    steps = [ProgramStep((Msg(0, 1, A, 0, B, 0, 4),), LPF_SYNC_DEFAULT,
+                         "w")]
+    assert dependency_cone(steps, sid=99) == []
+    assert dependency_cone(steps, sid=1) == []      # A is only read
+    assert dependency_cone(steps, sid=1, include_reads=True) == [0]
+
+
+# ---------------------------------------------------------------------------
+# the differential property: cone-first execution == in-order execution
+# ---------------------------------------------------------------------------
+
+def random_program(seed):
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(2, 8))
+    slots = [make_slot(100 + i, int(rng.integers(8, 25)), "int32")
+             for i in range(int(rng.integers(2, 5)))]
+    steps = []
+    for k in range(int(rng.integers(2, 7))):
+        reduce_op = [None, None, None, "sum", "max", "min"][
+            int(rng.integers(6))]
+        attrs = SyncAttributes(reduce_op=reduce_op)
+        msgs = []
+        for _ in range(int(rng.integers(0, 9))):
+            a = slots[int(rng.integers(len(slots)))]
+            b = slots[int(rng.integers(len(slots)))]
+            size = int(rng.integers(1, min(a.size, b.size) + 1))
+            msgs.append(Msg(
+                src=int(rng.integers(p)), dst=int(rng.integers(p)),
+                src_slot=a, src_off=int(rng.integers(a.size - size + 1)),
+                dst_slot=b, dst_off=int(rng.integers(b.size - size + 1)),
+                size=size))
+        steps.append(ProgramStep(tuple(msgs), attrs, f"s{k}"))
+    return p, slots, steps
+
+
+@table_property
+def test_cone_first_execution_bit_identical(seed):
+    """Flushing a read slot's cone early, then the deferred remainder,
+    must equal in-order execution on every slot of every process — the
+    exact reordering the dataflow-precise flush performs."""
+    rng = np.random.default_rng(seed + 7)
+    p, slots, steps = random_program(seed)
+    read_slot = slots[int(rng.integers(len(slots)))]
+    cone = dependency_cone(steps, read_slot.sid,
+                           include_reads=bool(rng.integers(2)))
+    cone_set = set(cone)
+    reordered = [steps[i] for i in cone] + \
+        [s for i, s in enumerate(steps) if i not in cone_set]
+    values = {s.sid: rng.integers(-10_000, 10_000,
+                                  size=(p, s.size)).astype(np.int32)
+              for s in slots}
+    eager = simulate_program([(s.msgs, s.attrs) for s in steps], values)
+    split = simulate_program([(s.msgs, s.attrs) for s in reordered],
+                             values)
+    for sid in eager:
+        assert (eager[sid] == split[sid]).all(), sid
+    # and the cone is genuinely a cone: every writer of the slot is in it
+    for i, s in enumerate(steps):
+        if any(m.dst_slot.sid == read_slot.sid for m in s.msgs):
+            assert i in cone_set
+
+
+# ---------------------------------------------------------------------------
+# XLA: the real ctx.program() cone-flush path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_read_flushes_exactly_its_cone(mesh8):
+    """Inside a recording, reading one slot executes exactly its
+    dependency cone (ledger superstep count == cone size); independent
+    supersteps stay pending until end_record — and the final values
+    match eager execution bit for bit."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import core as lpf
+    from repro.core import compat
+
+    boxes = {}
+
+    def run(recorded):
+        box = {}
+
+        def wrapped(_):
+            ctx = lpf.LPFContext(("x",))
+            box["ledger"] = ctx.ledger
+            ctx.resize_memory_register(4)
+            ctx.resize_message_queue(4 * ctx.p)
+            p = ctx.p
+            a = ctx.register_global(
+                "a", (jnp.arange(8) + 100 * ctx.pid).astype(jnp.int32))
+            b = ctx.register_global("b", jnp.zeros(8, jnp.int32))
+            c = ctx.register_global("c", jnp.zeros(8, jnp.int32))
+            d = ctx.register_global("d", jnp.zeros(8, jnp.int32))
+
+            def steps():
+                ctx.put(a, b, to=lambda s: (s + 1) % p, size=4)
+                ctx.sync(lpf.SyncAttributes(reduce_op="sum"), label="w_b")
+                ctx.put(a, c, to=lambda s: (s + 2) % p, size=4)
+                ctx.sync(label="w_c")
+                ctx.put(b, d, to=lambda s: (s + 3) % p, size=4)
+                ctx.sync(label="b2d")
+                if recorded:
+                    # the read of c: its cone is just w_c — one ledger
+                    # entry; w_b and b2d (a RAW chain) stay pending
+                    assert len(ctx._rec_pending) == 3
+                cval = ctx.value(c)
+                if recorded:
+                    assert box["ledger"].supersteps == 1
+                    assert box["ledger"].records[0].label == "w_c"
+                    assert len(ctx._rec_pending) == 2
+                # reading d pulls the chain [w_b, b2d]
+                dval = ctx.value(d)
+                if recorded:
+                    assert box["ledger"].supersteps == 3
+                    assert not ctx._rec_pending
+                return cval, dval
+
+            if recorded:
+                with ctx.program():
+                    out = steps()
+            else:
+                out = steps()
+            return out
+
+        fn = jax.jit(compat.shard_map(
+            wrapped, mesh=mesh8, in_specs=(P(),),
+            out_specs=(P("x"), P("x")), check_vma=False))
+        boxes[recorded] = box
+        return [np.asarray(v) for v in fn(jnp.zeros(1))]
+
+    eager = run(False)
+    coned = run(True)
+    for e, o in zip(eager, coned):
+        np.testing.assert_array_equal(e, o)
+
+
+@pytest.mark.slow
+def test_cone_flush_replay_hits_program_cache(mesh8):
+    """Satellite: after a cone flush splits a trace in two, replaying
+    the loop still hits the program cache for BOTH sub-programs, and
+    ``ctx.cache_stats.reset()`` zeroes the counters while keeping the
+    caches warm."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import core as lpf
+    from repro.core import compat
+
+    plan_cache = lpf.PlanCache()
+    program_cache = lpf.ProgramCache()
+    stats_box = {}
+
+    def spmd(ctx):
+        ctx.resize_memory_register(3)
+        ctx.resize_message_queue(2 * ctx.p)
+        p = ctx.p
+        a = ctx.register_global("a", jnp.arange(4.0) + ctx.pid)
+        b = ctx.register_global("b", jnp.zeros(8))
+        c = ctx.register_global("c", jnp.zeros(8))
+        acc = jnp.zeros(8)
+        for i in range(10):
+            with ctx.program():
+                ctx.put(a, b, to=lambda s: (s + 1) % p, size=4)
+                ctx.sync(label="w_b")
+                ctx.put(a, c, to=lambda s: (s + 2) % p, size=4)
+                ctx.sync(label="w_c")
+                # mid-program read of b: cone flush -> [w_b] executes,
+                # [w_c] stays pending until end_record
+                acc = acc + ctx.value(b)
+            acc = acc + ctx.value(c)
+            if i == 0:
+                # replay loop measured from a clean slate: the
+                # satellite reset() keeps the caches warm but zeroes
+                # the counters
+                ctx.cache_stats.reset()
+                assert ctx.cache_stats["program"].misses == 0
+                assert ctx.cache_stats["plan"].misses == 0
+        stats_box["stats"] = ctx.cache_stats
+        return acc
+
+    def wrapped(_):
+        ctx = lpf.LPFContext(("x",), plan_cache=plan_cache,
+                             program_cache=program_cache)
+        return spmd(ctx)
+
+    fn = jax.jit(compat.shard_map(wrapped, mesh=mesh8, in_specs=(P(),),
+                                  out_specs=P("x"), check_vma=False))
+    np.asarray(fn(jnp.zeros(1)))
+    stats = stats_box["stats"]
+    # 9 replay iterations x 2 sub-programs (the cone + the remainder),
+    # all hits, no optimizer or planner activity after the reset
+    assert stats["program"].hits == 18
+    assert stats["program"].misses == 0
+    assert stats["plan"].misses == 0

@@ -1,0 +1,310 @@
+"""The async overlap engine: split-phase supersteps, the overlap cost
+term, and the optimizer's overlap grouping.
+
+The overlap rewrite schedules adjacent compute-independent supersteps
+that the merge gate keeps separate (differing attrs, or a merged plan
+the model prices higher) as start/done pairs: all members read the
+group-entry slot state and launch their collectives back-to-back, then
+apply their writes.  Its ledger entry is
+``max_i(h_i)g + max_i(rounds_i)l + (k-1)*l_overlap``.  These tests
+check the grouping is sound (members must commute — we simulate them in
+reversed order and demand bit-identical slots), the gate never
+regresses the predicted schedule, and the XLA execution path ledgers
+exactly the planned overlap cost.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (LPF_SYNC_DEFAULT, Msg, OVERLAP_L_FRACTION,
+                        OVERLAPPABLE_METHODS, ProgramStep, Slot,
+                        SuperstepCost, SyncAttributes, optimize_program,
+                        overlap_cost, plan_sync, simulate_program)
+from repro.core.machine import CPU_HOST, probe
+from repro.core.program import trace_slot_map
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.fast
+
+MACHINE = probe({"x": 8}, CPU_HOST)
+
+
+def table_property(fn):
+    if HAVE_HYPOTHESIS:
+        return settings(deadline=None)(
+            given(st.integers(0, 2**31 - 1))(fn))
+    return pytest.mark.parametrize("seed", range(60))(fn)
+
+
+def make_slot(sid, size, dtype="int32", kind="global"):
+    return Slot(sid=sid, name=f"s{sid}", size=size, dtype=np.dtype(dtype),
+                kind=kind, orig_shape=(size,))
+
+
+# ---------------------------------------------------------------------------
+# the overlap cost term
+# ---------------------------------------------------------------------------
+
+def _cost(wire, rounds, h=None, n_msgs=4, method="direct"):
+    return SuperstepCost(label="", h_bytes=h if h is not None else wire,
+                         wire_bytes=wire, total_wire_bytes=wire * 4,
+                         rounds=rounds, n_msgs=n_msgs, method=method)
+
+
+def test_overlap_cost_fields():
+    a, b = _cost(100, 1, method="fused_ag"), _cost(40, 2, method="fused_rs")
+    c = overlap_cost([a, b], label="a||b")
+    assert c.wire_bytes == 100          # max: one wire hides the other
+    assert c.h_bytes == 100
+    assert c.total_wire_bytes == a.total_wire_bytes + b.total_wire_bytes
+    assert c.rounds == 2                # shared barrier: max of members
+    assert c.n_msgs == a.n_msgs + b.n_msgs
+    assert c.overlap_extra == 1
+    assert c.method == "overlap[fused_ag+fused_rs]"
+    # max(h_a,h_b)*g + max(r)*l + l_overlap
+    expect = (100 * MACHINE.g + 2 * MACHINE.l
+              + OVERLAP_L_FRACTION * MACHINE.l)
+    assert abs(c.predicted_seconds(MACHINE) - expect) < 1e-18
+    # a single-member "group" degenerates to the member itself
+    solo = overlap_cost([a], label="x")
+    assert solo == dataclasses.replace(a, label="x")
+    with pytest.raises(ValueError):
+        overlap_cost([])
+
+
+def test_overlap_cost_beats_sequential_iff_nontrivial():
+    a, b = _cost(100, 1), _cost(40, 1)
+    seq = a.predicted_seconds(MACHINE) + b.predicted_seconds(MACHINE)
+    assert overlap_cost([a, b]).predicted_seconds(MACHINE) < seq
+    # overlapping a zero-cost noop only adds issue latency — worse
+    noop = _cost(0, 0, n_msgs=0, method="noop")
+    seq2 = a.predicted_seconds(MACHINE) + noop.predicted_seconds(MACHINE)
+    assert overlap_cost([a, noop]).predicted_seconds(MACHINE) > seq2
+
+
+# ---------------------------------------------------------------------------
+# optimizer overlap grouping
+# ---------------------------------------------------------------------------
+
+def _rs_ag_trace(p, n_buckets, w=4):
+    """The DDP bucket shape: per bucket, a fused reduce-scatter into a
+    chunk slot, then a fused all-gather of the chunks — adjacent
+    cross-bucket supersteps are independent, in-bucket ones are not."""
+    steps = []
+    sid = 100
+    for k in range(n_buckets):
+        src = make_slot(sid, p * w)
+        buf = make_slot(sid + 1, w)
+        out = make_slot(sid + 2, p * w)
+        sid += 3
+        rs = tuple(Msg(s, d, src, d * w, buf, 0, w, origin="table")
+                   for s in range(p) for d in range(p))
+        ag = tuple(Msg(s, d, buf, 0, out, s * w, w, origin="table")
+                   for s in range(p) for d in range(p))
+        steps.append(ProgramStep(rs, SyncAttributes(reduce_op="sum"),
+                                 f"b{k}.rs"))
+        steps.append(ProgramStep(ag, LPF_SYNC_DEFAULT, f"b{k}.ag"))
+    return steps
+
+
+def test_ddp_bucket_chain_overlaps():
+    """[rs0, ag0, rs1, ag1, rs2, ag2] must group as
+    [rs0][ag0||rs1][ag1||rs2][ag2] — each bucket's all-gather hides the
+    next bucket's reduce-scatter, never its own (data dependence)."""
+    p = 4
+    steps = _rs_ag_trace(p, 3)
+    prog = optimize_program(steps, p, MACHINE)
+    assert [s.plan.method for s in prog.steps] == \
+        ["fused_rs", "fused_ag"] * 3
+    assert prog.overlap_groups == ((0,), (1, 2), (3, 4), (5,))
+    assert prog.n_overlapped == 2
+    assert prog.n_merged == 0           # differing attrs: merge refused
+    # the overlapped schedule is predicted strictly faster
+    seq = sum(s.plan.cost.predicted_seconds(MACHINE) for s in prog.steps)
+    assert prog.predicted_seconds(MACHINE) < seq
+
+
+def test_dependent_steps_never_overlap():
+    p = 4
+    A, B, C = make_slot(1, 16), make_slot(2, 16), make_slot(3, 16)
+    w1 = ProgramStep((Msg(0, 1, A, 0, B, 0, 4),),
+                     SyncAttributes(reduce_op="sum"), "w1")
+    # reads what w1 wrote -> must stay sequential
+    r1 = ProgramStep((Msg(1, 2, B, 0, C, 0, 4),), LPF_SYNC_DEFAULT, "r1")
+    prog = optimize_program([w1, r1], p, MACHINE)
+    assert prog.overlap_groups == ((0,), (1,))
+    # overlapping destination writes -> must stay sequential (WAW)
+    w2 = ProgramStep((Msg(2, 1, A, 4, B, 2, 4),), LPF_SYNC_DEFAULT, "w2")
+    prog2 = optimize_program([w1, w2], p, MACHINE)
+    assert prog2.overlap_groups == ((0,), (1,))
+
+
+def test_valiant_excluded_from_overlap():
+    assert "valiant" not in OVERLAPPABLE_METHODS
+    for m in ("direct", "fused", "fused_ag", "fused_rs", "fused_scatter",
+              "fused_gather", "bruck", "seq", "noop"):
+        assert m in OVERLAPPABLE_METHODS
+
+
+# ---------------------------------------------------------------------------
+# differential properties: overlapped traces preserve semantics
+# ---------------------------------------------------------------------------
+
+def random_program(seed):
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(2, 8))
+    slots = [make_slot(100 + i, int(rng.integers(8, 25)), "int32")
+             for i in range(int(rng.integers(2, 5)))]
+    steps = []
+    for k in range(int(rng.integers(2, 7))):
+        reduce_op = [None, None, None, "sum", "max", "min"][
+            int(rng.integers(6))]
+        attrs = SyncAttributes(
+            method=["auto", "direct"][int(rng.integers(2))],
+            reduce_op=reduce_op)
+        msgs = []
+        for _ in range(int(rng.integers(0, 9))):
+            a = slots[int(rng.integers(len(slots)))]
+            b = slots[int(rng.integers(len(slots)))]
+            size = int(rng.integers(1, min(a.size, b.size) + 1))
+            msgs.append(Msg(
+                src=int(rng.integers(p)), dst=int(rng.integers(p)),
+                src_slot=a, src_off=int(rng.integers(a.size - size + 1)),
+                dst_slot=b, dst_off=int(rng.integers(b.size - size + 1)),
+                size=size))
+        steps.append(ProgramStep(tuple(msgs), attrs, f"s{k}"))
+    return p, slots, steps
+
+
+def initial_values(slots, p, seed):
+    rng = np.random.default_rng(seed + 1)
+    return {s.sid: rng.integers(-10_000, 10_000,
+                                size=(p, s.size)).astype(np.int32)
+            for s in slots}
+
+
+@table_property
+def test_overlap_groups_commute_bit_for_bit(seed):
+    """Overlap is only sound if group members commute: executing each
+    group's members in REVERSED order must leave every slot bit-identical
+    to eager superstep-by-superstep execution."""
+    p, slots, steps = random_program(seed)
+    prog = optimize_program(steps, p, MACHINE)
+    covered = sorted(i for grp in prog.groups() for i in grp)
+    assert covered == list(range(len(prog.steps)))
+    values = initial_values(slots, p, seed)
+    eager = simulate_program([(s.msgs, s.attrs) for s in steps], values)
+    slot_map = trace_slot_map(steps)
+    tables = [(msgs, attrs)
+              for msgs, attrs, _, _ in prog.materialize(slot_map)]
+    permuted = [tables[i] for grp in prog.groups()
+                for i in reversed(grp)]
+    opt = simulate_program(permuted, values)
+    for sid in eager:
+        assert (eager[sid] == opt[sid]).all(), sid
+
+
+@table_property
+def test_overlap_never_regresses_predicted_schedule(seed):
+    """The overlap gate is cost-driven: the optimized program's
+    predicted seconds (overlap priced in, l_overlap included) never
+    exceed the raw per-superstep schedule's."""
+    p, slots, steps = random_program(seed)
+    prog = optimize_program(steps, p, MACHINE)
+    raw = sum(
+        plan_sync(list(s.msgs), p, s.attrs).cost.predicted_seconds(MACHINE)
+        for s in steps)
+    assert prog.predicted_seconds(MACHINE) <= raw + 1e-15
+    # every multi-member group is strictly cheaper than issuing its
+    # members sequentially (the gate's invariant)
+    for grp in prog.groups():
+        if len(grp) < 2:
+            continue
+        costs = [prog.steps[i].plan.cost for i in grp]
+        assert overlap_cost(costs).predicted_seconds(MACHINE) < \
+            sum(c.predicted_seconds(MACHINE) for c in costs)
+        for i in grp:
+            assert prog.steps[i].plan.method in OVERLAPPABLE_METHODS
+
+
+# ---------------------------------------------------------------------------
+# XLA: split-phase execution on a mesh, ledger == planned overlap cost
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_overlapped_bucket_pipeline_on_mesh(mesh8):
+    """Two split-phase allreduces staged in one recorded program: the
+    flush must issue [rs0][ag0||rs1][ag1], produce results identical to
+    two sequential allreduces, and ledger the overlapped superstep as
+    exactly ``overlap_cost`` of its members' plans."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import bsp
+    from repro import core as lpf
+    from repro.core import compat
+
+    ledgers = {}
+
+    def run(split):
+        def wrapped(_):
+            ctx = lpf.LPFContext(("x",))
+            ledgers[split] = ctx.ledger
+            x0 = (jnp.arange(8.0) + ctx.pid).astype(jnp.float32)
+            x1 = (jnp.arange(8.0) * 2 - ctx.pid).astype(jnp.float32)
+            if split:
+                with ctx.program("buckets"):
+                    h0 = bsp.allreduce_start(ctx, x0, label="b0")
+                    h1 = bsp.allreduce_start(ctx, x1, label="b1")
+                return (bsp.allreduce_done(ctx, h0),
+                        bsp.allreduce_done(ctx, h1))
+            return (bsp.allreduce(ctx, x0, label="b0"),
+                    bsp.allreduce(ctx, x1, label="b1"))
+
+        fn = jax.jit(compat.shard_map(
+            wrapped, mesh=mesh8, in_specs=(P(),),
+            out_specs=(P(), P()), check_vma=False))
+        return [np.asarray(v) for v in fn(jnp.zeros(1))]
+
+    eager = run(False)
+    overlapped = run(True)
+    for e, o in zip(eager, overlapped):
+        np.testing.assert_array_equal(e, o)
+
+    methods = [r.method for r in ledgers[True].records]
+    assert methods == ["fused_rs", "overlap[fused_ag+fused_rs]",
+                       "fused_ag"], methods
+    mid = ledgers[True].records[1]
+    assert mid.overlap_extra == 1
+    assert mid.label == "b0.ag||b1.rs"
+    # ledgered == planned, bit for bit: rebuild the member plans from
+    # scratch and compare against the executed overlap record
+    w = 1            # 8 elems over p=8
+    p = 8
+    src = lpf.Slot(sid=0, name="src", size=p * w,
+                   dtype=np.dtype("float32"), kind="global",
+                   orig_shape=(p * w,))
+    buf = lpf.Slot(sid=1, name="buf", size=w, dtype=np.dtype("float32"),
+                   kind="global", orig_shape=(w,))
+    out = lpf.Slot(sid=2, name="out", size=p * w,
+                   dtype=np.dtype("float32"), kind="global",
+                   orig_shape=(p * w,))
+    ag_msgs = [lpf.Msg(s, d, buf, 0, out, s * w, w, origin="table")
+               for s in range(p) for d in range(p)]
+    rs_msgs = [lpf.Msg(s, d, src, d * w, buf, 0, w, origin="table")
+               for s in range(p) for d in range(p)]
+    ag_plan = lpf.plan_sync(ag_msgs, p, lpf.LPF_SYNC_DEFAULT)
+    rs_plan = lpf.plan_sync(rs_msgs, p,
+                            lpf.SyncAttributes(reduce_op="sum"))
+    fresh = lpf.overlap_cost([ag_plan.cost, rs_plan.cost],
+                             label=mid.label)
+    assert fresh == mid
+    # overlap hides a superstep: one fewer ledger entry than eager
+    assert len(ledgers[True].records) == len(ledgers[False].records) - 1

@@ -106,6 +106,37 @@ def test_lpf_pod_sync_mode(mesh_pdm):
     assert ts.ledger.records[0].rounds == 2
 
 
+def test_lpf_bucketed_overlap_pod_sync(mesh_pdm):
+    """The overlapped DDP-style bucket pipeline: gradients split at
+    scan-layer boundaries, synced as overlapped rs+ag bucket pairs —
+    numerically equivalent to the single-pair rs+ag sync."""
+    cfg = tiny_cfg()
+    ts_flat = build_train_step(cfg, mesh_pdm, opt_cfg=AdamWConfig(lr=1e-3),
+                               grad_sync="lpf", donate=False)
+    ts_bkt = build_train_step(cfg, mesh_pdm, opt_cfg=AdamWConfig(lr=1e-3),
+                              grad_sync="lpf", donate=False,
+                              grad_bucket_bytes=1 << 20)
+    stream = stream_for(cfg)
+    batch = jax.tree.map(jnp.asarray, stream.batch(0))
+    p0, o0 = ts_flat.init_fn(jax.random.PRNGKey(0))
+    pf, _, mf = ts_flat.step_fn(p0, o0, batch)
+    p0b, o0b = ts_bkt.init_fn(jax.random.PRNGKey(0))
+    pb, _, mb = ts_bkt.step_fn(p0b, o0b, batch)
+    assert np.isfinite(float(mb["loss"]))
+    assert abs(float(mf["loss"]) - float(mb["loss"])) < 1e-5
+    for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(pb)):
+        diff = float(jnp.abs(a.astype(jnp.float32)
+                             - b.astype(jnp.float32)).max())
+        assert diff < 1e-4, diff
+    # the ledger carries the overlapped bucket schedule: rs/ag halves
+    # and overlap[..] groups
+    assert ts_bkt.ledger.records
+    assert all(r.method == "bucketed_overlap"
+               or r.method.startswith("overlap[")
+               for r in ts_bkt.ledger.records)
+    assert sum(r.wire_bytes for r in ts_bkt.ledger.records) > 0
+
+
 def test_local_sgd_stale_sync(mesh_pdm):
     """sync_every=k: inner steps skip the pod sync (stale), outer steps
     run it — loss still decreases."""
