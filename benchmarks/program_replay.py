@@ -135,14 +135,18 @@ def bench_replay(p: int = 8):
     rows.append(("eager-warm", cache.stats.misses,
                  (time.perf_counter() - t0) * 1e3))
 
-    # (c) recorded replay: one program signature per iteration; steps
-    # the optimizer left untouched reuse their staged messages verbatim
+    # (c) recorded replay: one canonical-order pass + one program
+    # signature per iteration (the flush shares the order between the
+    # cache lookup and materialize, as LPFContext does); steps the
+    # optimizer left untouched reuse their staged messages verbatim
+    from repro.core import canonical_order
     pcache = ProgramCache()
     t0 = time.perf_counter()
     for it in range(N_ITERS):
         steps = _fresh_trace(p, it)
-        prog = pcache.get_or_build(steps, p, machine)
-        prog.materialize(steps)
+        order = canonical_order(steps)
+        prog = pcache.get_or_build(steps, p, machine, order=order)
+        prog.materialize(steps, order=order)
     rows.append(("program-replay", pcache.stats.misses,
                  (time.perf_counter() - t0) * 1e3))
     return rows
@@ -272,10 +276,12 @@ def bench_overlap(p: int = OVERLAP_P, layers: int = 8,
 
 
 def check_overlap_ledger_bit_for_bit(p: int = 8):
-    """The recorded LPF bucket pipeline ([rs0][ag0||rs1][ag1]) must
-    ledger its overlapped superstep exactly as planned: rebuild the
+    """The recorded LPF bucket pipeline — which the DAG schedule search
+    now emits as [rs0||rs1][ag0||ag1] (the reduce-scatters are mutually
+    ready and commute; each all-gather depends only on its own bucket)
+    — must ledger every overlap group exactly as planned: rebuild the
     member plans from scratch and compare ``overlap_cost`` of them
-    against the executed record."""
+    against the executed records."""
     mesh = compat.make_mesh((p,), ("x",))
     from repro import bsp
     from repro import core as lpf
@@ -297,7 +303,8 @@ def check_overlap_ledger_bit_for_bit(p: int = 8):
     jax.block_until_ready(fn(jnp.zeros(1)))
     records = box["ledger"].records
     assert [r.method for r in records] == \
-        ["fused_rs", "overlap[fused_ag+fused_rs]", "fused_ag"], records
+        ["overlap[fused_rs+fused_rs]", "overlap[fused_ag+fused_ag]"], \
+        records
 
     w = 1
     src, buf, out = (_make_slot(i, [p, 1, p][i]) for i in range(3))
@@ -307,9 +314,12 @@ def check_overlap_ledger_bit_for_bit(p: int = 8):
           for d in range(p)]
     rs_plan = plan_sync(rs, p, LPF_SYNC_DEFAULT.replace(reduce_op="sum"))
     ag_plan = plan_sync(ag, p, LPF_SYNC_DEFAULT)
-    fresh = overlap_cost([ag_plan.cost, rs_plan.cost],
-                         label=records[1].label)
-    assert fresh == records[1], (fresh, records[1])
+    fresh_rs = overlap_cost([rs_plan.cost, rs_plan.cost],
+                            label=records[0].label)
+    assert fresh_rs == records[0], (fresh_rs, records[0])
+    fresh_ag = overlap_cost([ag_plan.cost, ag_plan.cost],
+                            label=records[1].label)
+    assert fresh_ag == records[1], (fresh_ag, records[1])
     return len(records)
 
 

@@ -30,8 +30,9 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 def _jobs(fast: bool):
     from . import (allreduce, fft, hrelation, messages, pagerank,
-                   program_replay, roofline)
+                   program_replay, roofline, schedule_search)
     return {
+        "scheduler": lambda: schedule_search.main(),
         "hrelation": lambda: hrelation.main(),
         "messages": lambda: messages.main(),
         "allreduce": lambda: allreduce.main(

@@ -112,8 +112,11 @@ def bsp_fft_spmd(ctx: LPFContext, x_local: jnp.ndarray, n: int, *,
     # batch — but the flush is dataflow-precise: reading Zk executes
     # exactly the redistribute's cone, so when this FFT runs inside an
     # enclosing recorded program (a batched spectral pipeline), the
-    # caller's independent supersteps stay recorded and may overlap
-    # with the reorder.
+    # caller's independent supersteps stay recorded, and the DAG
+    # schedule search may hoist them — non-adjacent or not — into
+    # overlap groups with this FFT's exchanges (two recorded FFTs
+    # schedule as [A.redist||B.redist][A.reorder||B.reorder]; see
+    # benchmarks/schedule_search.py).
     with ctx.program("bsp_fft"):
         # (2) the single redistribution: block d of my k2-range to process d
         w = npp // p  # n / p^2 elements per (src, dst) pair

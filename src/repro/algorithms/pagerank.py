@@ -91,8 +91,10 @@ def pagerank_spmd(ctx: LPFContext, g: PartitionedGraph, shard: dict, *,
         # superstep's cone, not whatever else the trace holds), so the
         # halo + score-update pattern keeps independent supersteps —
         # the nested stats-allreduce pair — recorded across the SpMV
-        # compute barrier, and replays per-iteration traces from the
-        # program cache
+        # compute barrier, where the DAG schedule search may reorder or
+        # overlap them, and replays per-iteration traces from the
+        # program cache (reordered-but-equivalent recordings of later
+        # iterations canonicalize to the same cache entry)
         with ctx2.program("pr.iter"):
             halo = _halo_exchange(ctx2, g, r, attrs, pack_idx)
             x_ext = jnp.concatenate([r, halo])

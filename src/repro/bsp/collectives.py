@@ -204,8 +204,9 @@ class CollectiveHandle:
     context is not recording) but the result read is postponed.  Reading
     through the matching ``*_done`` call is what flushes the handle's
     dependency cone — starting several collectives before finishing any
-    keeps them in one trace, where the optimizer batches or overlaps
-    them (the DDP bucket pipeline)."""
+    keeps them in one trace, where the optimizer's schedule search
+    batches, reorders, or overlaps them (the DDP bucket pipeline),
+    non-adjacent supersteps included."""
 
     out_slot: Optional[Slot]
     n: int                       # valid payload length in the out slot
@@ -262,11 +263,13 @@ def allreduce_start(ctx: LPFContext, x: jnp.ndarray, *,
     """Split-phase allreduce, superstep 1 of the DDP overlap story:
     stage the reduce-scatter + allgather pair *without* reading the
     result.  Inside a recording, several started allreduces share one
-    trace, where the optimizer issues bucket k's allgather overlapped
-    with bucket k+1's reduce-scatter; :func:`allreduce_done` flushes
-    exactly the handle's dependency cone.  Ops with no fused lowering
-    (exotic combine fns, compressed wire) fall back to the eager
-    exchange algorithm and return a pre-resolved handle."""
+    trace, where the optimizer's schedule search hoists the mutually
+    independent supersteps together — all buckets' reduce-scatters
+    issue as one overlap group, then all the allgathers (each depends
+    only on its own bucket's reduce-scatter); :func:`allreduce_done`
+    flushes exactly the handle's dependency cone.  Ops with no fused
+    lowering (exotic combine fns, compressed wire) fall back to the
+    eager exchange algorithm and return a pre-resolved handle."""
     if ctx.p == 1:
         return CollectiveHandle(None, int(x.shape[0]), 1, value=x)
     red_op = _use_fused_reduction(op, attrs)

@@ -9,8 +9,15 @@ owns that hop so the paper's sync attributes can be applied to it:
                  ``reduce-scatter`` + one ``all-gather`` on the wire,
 * COMPRESSED   — int8 payloads on the wire (effective g / 4); pair with
                  error feedback (``optim/compress.py``) for convergence,
-* STALE(k)     — handled one level up by the local-SGD runner
-                 (``runtime/local_sgd.py``): sync every k steps only.
+* STALE(k)     — at *bucket* granularity when ``bucket_bytes`` is set:
+                 the local-SGD outer loop used to skip whole syncs;
+                 with ``attrs.stale = k`` the sync instead skips
+                 individual stale buckets on off-steps
+                 (:func:`bucket_staleness` — the last-layer bucket,
+                 whose gradients carry the highest variance, stays
+                 fresh every step; lower-variance buckets sync every
+                 k-th step).  Without buckets the loop-level skip
+                 (``runtime/train_loop.py sync_every``) still applies.
 
 The sync runs fully *manual* (shard_map over all mesh axes) on per-device
 gradient shards: devices with equal (data, model) coordinates across pods
@@ -32,7 +39,23 @@ from repro.core import LPFContext, LPF_SYNC_DEFAULT, SyncAttributes, hook
 from repro.core import compat
 from . import collectives
 
-__all__ = ["build_cross_pod_sync", "lpf_allreduce"]
+__all__ = ["build_cross_pod_sync", "bucket_staleness", "lpf_allreduce"]
+
+
+def bucket_staleness(n_buckets: int, stale: int) -> list:
+    """Per-bucket staleness schedule for the bucketed-sync x local-SGD
+    composition: bucket ``b`` syncs on (static) step ``s`` iff its entry
+    here is 0 or ``s`` is a multiple of it.
+
+    Bucket indices follow :func:`repro.bsp.pod_sync.bucketize` order
+    (first bucket = first layers).  The LAST bucket — the layers
+    closest to the loss, whose gradients carry the highest variance and
+    tolerate staleness worst — is always fresh; every earlier
+    (lower-variance) bucket inherits ``stale`` and is skipped on
+    off-steps.  ``stale <= 0`` disables skipping entirely."""
+    if stale <= 0 or n_buckets <= 0:
+        return [0] * max(n_buckets, 0)
+    return [stale] * (n_buckets - 1) + [0]
 
 
 def lpf_allreduce(ctx: LPFContext, x: jnp.ndarray, *,
@@ -60,16 +83,26 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
     With ``bucket_bytes`` the per-leaf gradients are packed into
     ~``bucket_bytes``-sized buckets and every bucket's reduce-scatter +
     all-gather pair is staged *split-phase* into one recorded LPF
-    program before any result is read: the optimizer issues bucket k's
-    all-gather overlapped with bucket k+1's reduce-scatter (the classic
-    DDP pipeline) because only adjacent same-bucket supersteps are
-    data-dependent, and the dataflow-precise flush lets each result read
-    execute exactly its own bucket's cone.  Repeated training steps
-    replay the whole cached multi-bucket trace."""
-    if pod_axis not in mesh.axis_names or mesh.shape[pod_axis] == 1:
-        return lambda grads: grads
+    program before any result is read — in REVERSE layer order (the
+    last layers' gradients materialise first in the backward pass, so
+    issuing their bucket first lets the first reduce-scatter launch as
+    soon as those gradients exist): the program optimizer's schedule
+    search then overlaps the mutually independent cross-bucket
+    supersteps (only same-bucket pairs are data-dependent), and the
+    dataflow-precise flush lets each result read execute exactly its
+    own bucket's cone.  Repeated training steps replay the whole
+    cached multi-bucket trace.
 
-    def sync(grads):
+    ``attrs.stale = k > 0`` composes bucketing with local SGD at bucket
+    granularity: ``sync(grads, step=i)`` (``step`` is a *static* Python
+    int — pass it at trace time, one jitted variant per phase) skips
+    the stale buckets on off-steps per :func:`bucket_staleness`; their
+    leaves pass through pod-local.  The last-layer bucket always
+    syncs."""
+    if pod_axis not in mesh.axis_names or mesh.shape[pod_axis] == 1:
+        return lambda grads, step=0: grads
+
+    def sync(grads, step: int = 0):
         leaves, treedef = compat.tree_flatten(grads)
         specs = compat.tree_flatten(grad_specs)[0]
 
@@ -82,13 +115,18 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
                          for l in leaves_in]
                 buckets = bucketize([f.nbytes for f in flats],
                                     bucket_bytes)
-                # start every bucket's rs+ag pair inside ONE recording;
-                # exiting the program flushes the whole multi-bucket
-                # trace as one optimized program with the cross-bucket
-                # supersteps issued split-phase (ag_k || rs_{k+1})
+                stales = bucket_staleness(len(buckets), attrs.stale)
+                # start every bucket's rs+ag pair inside ONE recording,
+                # last-layer bucket first (backward-pass gradient
+                # availability); exiting the program flushes the whole
+                # multi-bucket trace as one optimized program whose
+                # schedule search overlaps the independent cross-bucket
+                # supersteps split-phase
                 handles = []
                 with ctx.program("bucket_sync"):
-                    for bi, idxs in enumerate(buckets):
+                    for bi, idxs in reversed(list(enumerate(buckets))):
+                        if stales[bi] and step % stales[bi] != 0:
+                            continue    # stale bucket: keep local grads
                         flat = jnp.concatenate([flats[i] for i in idxs]) \
                             if len(idxs) > 1 else flats[idxs[0]]
                         n = flat.shape[0]
@@ -108,7 +146,9 @@ def build_cross_pod_sync(mesh: jax.sharding.Mesh, grad_specs: Any, *,
                 outs = []
                 for part, flat, shp, dt in zip(red_parts, flats, shapes,
                                                dtypes):
-                    if part is None:    # zero-byte leaf: nothing on the wire
+                    if part is None:
+                        # zero-byte leaf, or a stale-skipped bucket:
+                        # nothing on the wire, the pod-local value rides
                         part = flat
                     outs.append(part.reshape(shp).astype(dt))
                 return tuple(outs)

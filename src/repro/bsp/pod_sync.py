@@ -36,13 +36,16 @@ instead.  Two methods:
   bucket k's output, so it cannot launch early): the faithful
   *sequential* BSP schedule, and the baseline the overlap benchmark
   measures against.
-* ``bucketed_overlap`` — the same buckets issued *split-phase*: bucket
-  k+1's reduce-scatter launches before bucket k's all-gather, so the
-  two independent collectives overlap on the wire — the classic DDP
-  gradient-bucket pipeline.  The ledger records the overlapped
-  schedule itself ([rs0][ag_k||rs_k+1]...[ag_B-1], each group priced
-  ``max(h_i)g + max(rounds_i)l + l_overlap`` via ``overlap_cost``).
-  ``auto`` with ``bucket_bytes`` picks this.
+* ``bucketed_overlap`` — the same buckets issued *split-phase* in
+  REVERSE layer order (last layer's bucket first — the order the
+  backward pass materialises gradients, so the first reduce-scatter
+  can launch before earlier layers' gradients exist): each bucket's
+  reduce-scatter launches before the previously issued bucket's
+  all-gather, so the two independent collectives overlap on the wire —
+  the classic DDP gradient-bucket pipeline.  The ledger records the
+  overlapped schedule itself ([rs_B-1][ag_k||rs_k-1]...[ag_0], each
+  group priced ``max(h_i)g + max(rounds_i)l + l_overlap`` via
+  ``overlap_cost``).  ``auto`` with ``bucket_bytes`` picks this.
 * ``ring``  — one ``lax.psum`` per leaf (XLA's own ring all-reduce);
   the compressed path always uses this, as int16 summands must be
   combined before dequantisation.
@@ -212,16 +215,21 @@ def pod_allreduce(tree, q: int, axis: str = "pod", *,
             return full
 
         if method == "bucketed_overlap":
-            # DDP-style software pipeline: issue bucket k+1's
-            # reduce-scatter *before* bucket k's all-gather, so the two
-            # independent collectives can overlap on the wire.  The
-            # ledger records the schedule as issued — [rs0]
-            # [ag_k||rs_k+1]... [ag_B-1] — with every overlap group
-            # priced by the overlap cost model, so predicted_seconds
-            # over this ledger is the overlapped schedule's time, not
-            # the sequential one's.
+            # DDP-style software pipeline: issue the next bucket's
+            # reduce-scatter *before* the previous bucket's all-gather,
+            # so the two independent collectives can overlap on the
+            # wire.  Buckets are issued LAST-LAYER-FIRST: the backward
+            # pass materialises the last layers' gradients first, so
+            # reversing the issue order lets XLA start the first
+            # reduce-scatter before earlier layers' gradients exist —
+            # matching gradient availability instead of fighting it.
+            # The ledger records the schedule as issued —
+            # [rs_B-1][ag_k||rs_k-1]... [ag_0] — with every overlap
+            # group priced by the overlap cost model, so
+            # predicted_seconds over this ledger is the overlapped
+            # schedule's time, not the sequential one's.
             pending = None
-            for bi, idxs in enumerate(buckets):
+            for bi, idxs in reversed(list(enumerate(buckets))):
                 red, shapes, n, m = _rs_start(
                     [leaves[i] for i in idxs], q, axis)
                 if ledger is not None:

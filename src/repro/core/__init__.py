@@ -21,7 +21,7 @@ Paper primitive             This module
 from .attrs import CompressSpec, LPF_SYNC_DEFAULT, SyncAttributes
 from .context import LPFContext, exec_, hook, rehook
 from .cost import (CostLedger, FUSED_METHODS, OVERLAP_L_FRACTION,
-                   SuperstepCost, overlap_cost)
+                   SuperstepCost, overlap_cost, schedule_seconds)
 from .errors import (LPF_ERR_FATAL, LPF_ERR_OUT_OF_MEMORY, LPF_SUCCESS,
                      LPFCapacityError, LPFError, LPFFatalError)
 from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
@@ -30,11 +30,11 @@ from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
                       LPFMachine, probe)
 from .memslot import Slot, SlotRegistry
 from .program import (OptimizedStep, ProgramCache, ProgramStep,
-                      SuperstepProgram, dependency_cone,
+                      SuperstepProgram, canonical_order, dependency_cone,
                       global_program_cache, optimize_program,
                       program_signature, simulate_program)
 from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
-                   RoundPlan, SuperstepPlan, begin_plan,
+                   RoundPlan, SuperstepPlan, begin_plan, conflict_free,
                    execute_overlapped, execute_plan, global_plan_cache,
                    plan_cost, plan_sync, plan_signature)
 from . import compat
@@ -44,6 +44,7 @@ __all__ = [
     "SyncAttributes", "CompressSpec", "LPF_SYNC_DEFAULT",
     "CostLedger", "SuperstepCost", "FUSED_METHODS",
     "OVERLAP_L_FRACTION", "overlap_cost", "OVERLAPPABLE_METHODS",
+    "schedule_seconds", "conflict_free", "canonical_order",
     "begin_plan", "execute_overlapped", "dependency_cone",
     "LPFError", "LPFCapacityError", "LPFFatalError",
     "LPF_SUCCESS", "LPF_ERR_OUT_OF_MEMORY", "LPF_ERR_FATAL",

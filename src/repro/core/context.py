@@ -103,6 +103,9 @@ class LPFContext:
         self._rec_pending: List[ProgramStep] = []
         self._rec_deferred_dereg: List[Slot] = []
         self._gate_machine: Optional[LPFMachine] = None
+        #: the most recently executed (optimized) program — inspect the
+        #: searched schedule with ``ctx.last_program.explain(machine)``
+        self.last_program = None
 
     # ------------------------------------------------------------------
     # capacity management: lpf_resize_message_queue / _memory_register
@@ -322,12 +325,19 @@ class LPFContext:
         execute it; the ledger gains one entry per *optimized* superstep
         — each exactly its plan's predicted cost — and one combined
         entry (``overlap_cost`` of the members' plans) per overlap
-        group issued split-phase."""
+        group issued split-phase.  The searched schedule may *reorder*
+        supersteps (non-adjacent hoists); ``materialize`` resolves the
+        program's canonical ranks against this trace's own canonical
+        order, so labels and staged-message reuse stay attached to the
+        right recorded steps whatever order the scheduler emitted."""
+        from .program import canonical_order
+        order = canonical_order(steps)
         prog = self.program_cache.get_or_build(
             steps, self.p, self._machine(), plan_cache=self.plan_cache,
-            scratch=self._scratch)
+            scratch=self._scratch, order=order)
+        self.last_program = prog
         labels = [st.label for st in steps]
-        entries = prog.materialize(steps, labels)
+        entries = prog.materialize(steps, labels, order=order)
         for grp in prog.groups():
             if len(grp) == 1:
                 msgs, attrs, label, plan = entries[grp[0]]

@@ -17,7 +17,7 @@ from typing import List, Optional, Sequence
 from .machine import LPFMachine
 
 __all__ = ["SuperstepCost", "CostLedger", "FUSED_METHODS",
-           "OVERLAP_L_FRACTION", "overlap_cost"]
+           "OVERLAP_L_FRACTION", "overlap_cost", "schedule_seconds"]
 
 #: methods that lower onto one native XLA collective (single round by
 #: construction; their wire bytes equal the collective's schedule)
@@ -80,6 +80,23 @@ def overlap_cost(costs: Sequence[SuperstepCost],
         n_msgs=sum(c.n_msgs for c in costs),
         method=f"overlap[{'+'.join(c.method for c in costs)}]",
         overlap_extra=len(costs) - 1)
+
+
+def schedule_seconds(cost_groups: Sequence[Sequence[SuperstepCost]],
+                     machine: LPFMachine) -> float:
+    """BSP time of a whole *schedule*: a sequence of issue groups, each a
+    list of member superstep costs.  Singleton groups are priced as plain
+    supersteps; multi-member groups as one :func:`overlap_cost` entry.
+    This is the quantity the program optimizer's schedule search
+    minimises, and the single comparison point for "schedule A vs
+    schedule B" questions (searched vs peephole, optimized vs in-order):
+    both sides priced by the same machine, overlap pricing included."""
+    total = 0.0
+    for costs in cost_groups:
+        costs = list(costs)
+        c = costs[0] if len(costs) == 1 else overlap_cost(costs)
+        total += c.predicted_seconds(machine)
+    return total
 
 
 class CostLedger:

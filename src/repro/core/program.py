@@ -19,7 +19,12 @@ module lifts the plan/cache/execute architecture one level up:
   leaving independent supersteps recorded, so interleaved compute keeps
   its sequential semantics without narrowing the batching/overlap
   window.
-* **optimize** — :func:`optimize_program` rewrites one flushed trace:
+* **optimize** — :func:`optimize_program` is a cost-model-driven
+  *schedule search* over the trace's dependency DAG.  The trace is
+  first brought into :func:`canonical_order` — a deterministic
+  topological order of the must-precede DAG keyed by step content, so
+  reordered-but-equivalent recordings canonicalize (and cache)
+  identically — then rewritten:
 
   1. *coalescing* — same-``(src, dst, slot-pair)`` messages contiguous
      in both offsets merge into one fatter message (kept only when the
@@ -29,24 +34,44 @@ module lifts the plan/cache/execute architecture one level up:
      completely overwritten by a later superstep before any read (and
      before the trace ends) is dropped, gated the same way (removing a
      message can demote a fused classification);
-  3. *superstep batching* — adjacent compute-independent supersteps
-     with equal attributes merge into one sync, cost-gated by the BSP
-     model: merge only when ``h_merged*g + l < sum(h_i*g + l)`` (with
-     ``h``/rounds taken from the planned schedules);
-  4. *split-phase overlap* — adjacent independent supersteps the merge
-     gate keeps separate (differing attrs, or a merged plan priced
-     higher) are grouped for overlapped issue: all members' reads and
-     collectives launch back-to-back, then all writes apply
-     (:func:`repro.core.sync.execute_overlapped`).  A k-member group is
-     priced ``max_i(h_i)g + max_i(rounds_i)l + (k-1)*l_overlap``
-     (:func:`repro.core.cost.overlap_cost`) and admitted only below the
-     sequential sum; members must commute, and valiant supersteps never
-     overlap (phase-1 scratch writes land in the start half).
+  3. *superstep batching as list scheduling* — the scheduler walks the
+     must-precede DAG and grows each emitted superstep with any
+     still-unscheduled step whose predecessors are already placed —
+     **non-adjacent** independent supersteps hoist over intervening
+     steps whenever commutation permits — merging equal-attribute
+     steps cost-gated by the BSP model (``h_merged*g + l <
+     sum(h_i*g + l)``, ``h``/rounds from the planned schedules);
+  4. *Valiant-aware attr rewrites* — when the merge gate refuses on
+     differing attrs or prices the merged plan higher, and for a
+     skewed/fragmented fat superstep on its own, the scheduler may
+     *rewrite* the step's attributes to route it through two-phase
+     Valiant routing; admissible only on conflict-free tables
+     (``repro.core.sync.conflict_free`` — a method rewrite must not
+     change CRCW winners) and accepted iff the planned cost strictly
+     improves;
+  5. *split-phase overlap as list scheduling* — independent supersteps
+     the merge gate keeps separate (differing attrs, or a merged plan
+     priced higher) are grouped for overlapped issue, again hoisting
+     **non-adjacent** ready supersteps over intervening ones: all
+     members' reads and collectives launch back-to-back, then all
+     writes apply (:func:`repro.core.sync.execute_overlapped`).  A
+     k-member group is priced ``max_i(h_i)g + max_i(rounds_i)l +
+     (k-1)*l_overlap`` (:func:`repro.core.cost.overlap_cost`) and
+     admitted only below the sequential sum; members must commute, and
+     valiant supersteps never overlap (phase-1 scratch writes land in
+     the start half).
+
+  ``search=False`` restores the pre-search behaviour — the adjacent
+  pairs-only peephole — kept as the measurable baseline
+  (``benchmarks/schedule_search.py``); the cached/executed path always
+  searches.  :meth:`SuperstepProgram.explain` renders the found
+  schedule (groups, hoists, rewrites, predicted vs in-order BSP cost).
 
 * **replay** — optimized traces are cached in a :class:`ProgramCache`
-  keyed by the canonical program signature (slot ids renamed by first
-  occurrence *across the whole trace*), so repeated invocations —
-  a collective called per layer, an FFT called per batch — skip the
+  keyed by the canonical program signature (steps in canonical order,
+  slot ids renamed by first occurrence *across the whole ordered
+  trace*), so repeated invocations — a collective called per layer, an
+  FFT called per batch, and legal reorderings of either — skip the
   optimizer and the planner entirely and go straight to
   :func:`repro.core.sync.execute_plan` with pre-planned supersteps.
 
@@ -73,18 +98,24 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .attrs import SyncAttributes
-from .cost import overlap_cost
+from .cost import SuperstepCost, overlap_cost, schedule_seconds
 from .errors import LPFFatalError
 from .machine import LPFMachine
 from .memslot import Slot
 from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
-                   SuperstepPlan, plan_sync)
+                   SuperstepPlan, conflict_free, plan_sync)
 
 __all__ = [
     "ProgramStep", "OptimizedStep", "SuperstepProgram", "ProgramCache",
     "global_program_cache", "program_signature", "optimize_program",
-    "simulate_program", "dependency_cone",
+    "simulate_program", "dependency_cone", "canonical_order",
 ]
+
+#: combined planned rounds at which the scheduler bothers pricing a
+#: two-phase Valiant route for a (merged) superstep: thin well-formed
+#: relations never profit from the doubled wire, so the rewrite search
+#: is reserved for skewed/fragmented fat schedules
+VALIANT_REWRITE_MIN_ROUNDS = 4
 
 #: canonical message: (src, dst, src_slot_idx, src_off, dst_slot_idx,
 #: dst_off, size, origin) with slot indices assigned by first occurrence
@@ -104,10 +135,13 @@ class ProgramStep:
 @dataclasses.dataclass(frozen=True)
 class OptimizedStep:
     """One superstep of the optimized trace, in canonical (slot-renamed)
-    form plus its pre-computed plan.  ``merged_from`` names the recorded
-    step indices this superstep executes; ``unchanged`` marks a step no
-    rewrite touched, letting replay reuse the staged messages verbatim
-    instead of rebuilding them from the canonical table."""
+    form plus its pre-computed plan.  ``merged_from`` names the
+    *canonical ranks* (positions in :func:`canonical_order` of the
+    recorded trace) this superstep executes; ``unchanged`` marks a step
+    no rewrite touched, letting replay reuse the staged messages
+    verbatim instead of rebuilding them from the canonical table.
+    ``rewrite`` records an attr rewrite the scheduler applied (e.g.
+    ``"valiant"`` — the step's attrs are no longer the recorded ones)."""
 
     table: Tuple[CanonMsg, ...]
     attrs: SyncAttributes
@@ -115,6 +149,7 @@ class OptimizedStep:
     plan: SuperstepPlan
     merged_from: Tuple[int, ...]
     unchanged: bool = False
+    rewrite: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +168,17 @@ class SuperstepProgram:
     #: entry costing ``max_i(h_i)*g + max_i(rounds_i)*l + (k-1)*l_overlap``
     overlap_groups: Tuple[Tuple[int, ...], ...] = ()
     n_overlapped: int = 0    # supersteps hidden under another's wire time
+    n_rewritten: int = 0     # supersteps whose attrs the scheduler rewrote
+    n_hoisted: int = 0       # non-adjacent merge/overlap moves performed
+    #: how this program's ``merged_from`` ranks and canonical slot
+    #: indices were assigned: ``True`` = :func:`canonical_order` of the
+    #: recorded trace (the searched/cached path), ``False`` = recorded
+    #: order (a ``search=False`` peephole program) — ``materialize``
+    #: must resolve ranks the same way the program was built
+    canonical: bool = True
+    #: the recorded supersteps' own planned costs (canonical order) —
+    #: the in-order baseline :meth:`explain` reports the search against
+    in_order_costs: Tuple[SuperstepCost, ...] = ()
 
     def groups(self) -> Tuple[Tuple[int, ...], ...]:
         """``overlap_groups``, defaulting to one singleton per step."""
@@ -142,45 +188,124 @@ class SuperstepProgram:
 
     def predicted_seconds(self, machine: LPFMachine) -> float:
         """BSP time of the optimized schedule, overlap priced in."""
-        total = 0.0
-        for grp in self.groups():
+        return schedule_seconds(
+            [[self.steps[i].plan.cost for i in grp]
+             for grp in self.groups()], machine)
+
+    def in_order_seconds(self, machine: LPFMachine) -> float:
+        """BSP time of executing the recorded trace superstep by
+        superstep, each under its own plan — the baseline the schedule
+        search starts from."""
+        return sum(c.predicted_seconds(machine)
+                   for c in self.in_order_costs)
+
+    def explain(self, machine: Optional[LPFMachine] = None) -> str:
+        """Human-readable rendering of the searched schedule: issue
+        groups with member labels, merges/hoists/attr rewrites applied,
+        and (when ``machine`` is given) the predicted BSP time of every
+        group plus the in-order-vs-scheduled comparison."""
+        lines = [
+            f"SuperstepProgram: {self.n_recorded} recorded -> "
+            f"{len(self.steps)} supersteps in {len(self.groups())} "
+            f"issue groups",
+            f"  rewrites: {self.n_coalesced} coalesced msgs, "
+            f"{self.n_eliminated} dead transfers, {self.n_merged} merged, "
+            f"{self.n_overlapped} overlapped, {self.n_rewritten} "
+            f"attr-rewritten, {self.n_hoisted} non-adjacent hoists",
+        ]
+        for gi, grp in enumerate(self.groups()):
             costs = [self.steps[i].plan.cost for i in grp]
-            total += (costs[0] if len(costs) == 1
-                      else overlap_cost(costs)).predicted_seconds(machine)
-        return total
+            c = costs[0] if len(costs) == 1 else overlap_cost(costs)
+            head = " || ".join(self.steps[i].label for i in grp)
+            line = (f"  [{gi}] {head:<36} {c.method:<28} "
+                    f"wire {c.wire_bytes:>8}B  rounds {c.rounds}")
+            if machine is not None:
+                line += f"  {c.predicted_seconds(machine) * 1e6:>9.2f}us"
+            lines.append(line)
+            for i in grp:
+                st = self.steps[i]
+                notes = []
+                if len(st.merged_from) > 1:
+                    notes.append("merged from recorded steps "
+                                 f"{tuple(st.merged_from)}")
+                if st.rewrite:
+                    notes.append(f"attrs rewritten -> {st.rewrite}")
+                if notes:
+                    lines.append(f"        {st.label}: "
+                                 + "; ".join(notes))
+        if machine is not None and self.in_order_costs:
+            in_order = self.in_order_seconds(machine)
+            sched = self.predicted_seconds(machine)
+            ratio = in_order / sched if sched > 0 else float("inf")
+            lines.append(
+                f"  in-order BSP time {in_order * 1e6:.2f}us -> "
+                f"scheduled {sched * 1e6:.2f}us  ({ratio:.2f}x)")
+        return "\n".join(lines)
+
+    def slot_map(self, steps: Sequence[ProgramStep]) -> List[Slot]:
+        """The slot list this program's canonical indices refer to, for
+        a replaying trace ``steps`` — first occurrence in
+        :func:`canonical_order` for searched programs, recorded order
+        for ``search=False`` ones.  Use this (or pass ``steps``
+        directly) rather than a bare ``trace_slot_map`` call, whose
+        default ordering only matches canonical programs."""
+        return trace_slot_map(
+            steps, None if self.canonical else list(range(len(steps))))
 
     def materialize(self, slot_map_or_steps,
-                    labels: Optional[Sequence[str]] = None
+                    labels: Optional[Sequence[str]] = None,
+                    order: Optional[Sequence[int]] = None
                     ) -> List[Tuple[List[Msg], SyncAttributes, str,
                                     SuperstepPlan]]:
         """Rebind the canonical tables to actual slots.  Pass either the
         replaying trace's raw :class:`ProgramStep` list (untouched steps
         reuse their staged messages verbatim; rewritten ones rebuild
-        from the canonical table via the trace's first-occurrence slot
-        map) or a pre-computed slot list.  ``labels`` are the replaying
-        trace's per-step labels, so a cached program replayed under new
-        labels ledgers under those (merged supersteps join theirs with
-        ``+``)."""
+        from the canonical table via the trace's canonical-order
+        first-occurrence slot map) or a pre-computed slot list.
+        ``labels`` are the replaying trace's per-step labels *in
+        recorded order*, so a cached program replayed under new labels
+        ledgers under those (merged supersteps join theirs with ``+``);
+        ``merged_from`` ranks are resolved through the replaying trace's
+        own :func:`canonical_order`, which — the signature being shared
+        — matches the order the program was built in."""
         raw_steps: Optional[Sequence[ProgramStep]] = None
         slot_map: Optional[List[Slot]] = None
         if slot_map_or_steps and isinstance(slot_map_or_steps[0],
                                             ProgramStep):
             raw_steps = slot_map_or_steps
+            if not self.canonical:
+                order = list(range(len(raw_steps)))
+            elif order is None:
+                order = canonical_order(raw_steps)
         else:
             slot_map = list(slot_map_or_steps)
+            if labels is not None and order is None:
+                if self.canonical:
+                    # ranks are canonical; without the steps (or an
+                    # explicit order) recorded labels cannot be mapped
+                    raise LPFFatalError(
+                        "materialize(slot_list, labels=...) on a "
+                        "searched program needs order= (or pass the "
+                        "raw steps), else labels would be resolved by "
+                        "canonical rank instead of recorded position")
+                order = list(range(self.n_recorded))
         out = []
         for st in self.steps:
             if raw_steps is not None and st.unchanged:
-                msgs = list(raw_steps[st.merged_from[0]].msgs)
+                msgs = list(raw_steps[order[st.merged_from[0]]].msgs)
             else:
                 if slot_map is None:
-                    slot_map = trace_slot_map(raw_steps)
+                    slot_map = trace_slot_map(raw_steps, order)
                 msgs = [Msg(src, dst, slot_map[si], so, slot_map[di], do,
                             sz, origin=origin)
                         for (src, dst, si, so, di, do, sz, origin)
                         in st.table]
-            label = st.label if labels is None else \
-                "+".join(labels[i] for i in st.merged_from)
+            if labels is None:
+                label = st.label
+            else:
+                label = "+".join(
+                    labels[i if order is None else order[i]]
+                    for i in st.merged_from)
             out.append((msgs, st.attrs, label, st.plan))
         return out
 
@@ -214,12 +339,21 @@ def _slot_canon() -> Tuple[Dict[int, int], List[Tuple[int, str, str]],
     return canon, descrs, key
 
 
-def trace_slot_map(steps: Sequence[ProgramStep]) -> List[Slot]:
-    """Actual slots of a raw trace in first-occurrence order — the
-    inverse of the canonical renaming."""
+def trace_slot_map(steps: Sequence[ProgramStep],
+                   order: Optional[Sequence[int]] = None) -> List[Slot]:
+    """Actual slots of a raw trace in canonical-order first-occurrence —
+    the inverse of the canonical renaming.  ``order`` (a precomputed
+    :func:`canonical_order`) avoids recomputing the DAG sort.  The
+    default ordering matches *searched* programs only; when holding a
+    :class:`SuperstepProgram`, prefer :meth:`SuperstepProgram.slot_map`
+    (or pass the steps straight to ``materialize``), which honours the
+    program's own rank ordering (``search=False`` programs use recorded
+    order)."""
+    if order is None:
+        order = canonical_order(steps)
     seen: Dict[int, Slot] = {}
-    for st in steps:
-        for m in st.msgs:
+    for i in order:
+        for m in steps[i].msgs:
             for slot in (m.src_slot, m.dst_slot):
                 if slot.sid not in seen:
                     seen[slot.sid] = slot
@@ -231,15 +365,100 @@ def _attrs_key(attrs: SyncAttributes) -> Hashable:
             attrs.compress, attrs.stale, attrs.valiant_seed)
 
 
+def _sortable_attrs_key(attrs: SyncAttributes) -> Tuple:
+    """Like :func:`_attrs_key` but totally ordered (no ``None``/object
+    fields), so ready-step keys can be compared during canonicalization."""
+    return (attrs.method, bool(attrs.no_conflict), attrs.reduce_op or "",
+            "" if attrs.compress is None else repr(attrs.compress),
+            attrs.stale, attrs.valiant_seed)
+
+
+def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
+    """A deterministic topological order of the trace's must-precede DAG,
+    chosen by step *content* rather than recorded position: among ready
+    steps the one with the smallest content key (attributes + message
+    table, slots referred to by their already-assigned canonical index
+    or, when unseen, by descriptor) is scheduled first.
+
+    Two recordings that are legal reorderings of each other have the
+    same DAG and the same step contents, so they canonicalize to the
+    same sequence — which is what lets :func:`program_signature` give
+    them one :class:`ProgramCache` entry.  (Steps with bit-identical
+    content keys fall back to recorded position; such ties are only
+    ambiguous between interchangeable steps, and at worst cost a cache
+    miss, never a wrong schedule.)"""
+    n = len(steps)
+    if n <= 1:
+        return list(range(n))
+    preds = _conflict_dag([st.msgs for st in steps])
+    npreds = [len(pr) for pr in preds]
+    succs: List[List[int]] = [[] for _ in range(n)]
+    for j, pr in enumerate(preds):
+        for i in pr:
+            succs[i].append(j)
+    canon: Dict[int, int] = {}
+
+    def step_key(st: ProgramStep) -> Tuple:
+        local: Dict[int, int] = {}
+
+        def ref(slot: Slot) -> Tuple:
+            idx = canon.get(slot.sid)
+            if idx is not None:
+                return (0, idx, "", "", 0)
+            li = local.setdefault(slot.sid, len(local))
+            return (1, slot.size, _dtype_str(slot.dtype), slot.kind, li)
+
+        return (_sortable_attrs_key(st.attrs),
+                tuple((m.src, m.dst, ref(m.src_slot), m.src_off,
+                       ref(m.dst_slot), m.dst_off, m.size, m.origin)
+                      for m in st.msgs))
+
+    sids = [{m.src_slot.sid for m in st.msgs}
+            | {m.dst_slot.sid for m in st.msgs} for st in steps]
+    keys: Dict[int, Tuple] = {}
+    ready = [i for i in range(n) if npreds[i] == 0]
+    order: List[int] = []
+    while ready:
+        for i in ready:
+            if i not in keys:
+                keys[i] = step_key(steps[i])
+        best = min(ready, key=lambda i: (keys[i], i))
+        ready.remove(best)
+        order.append(best)
+        newly: set = set()
+        for m in steps[best].msgs:
+            for slot in (m.src_slot, m.dst_slot):
+                if slot.sid not in canon:
+                    canon[slot.sid] = len(canon)
+                    newly.add(slot.sid)
+        if newly:
+            # a slot just gained its canonical index: keys that referred
+            # to it by descriptor must be recomputed
+            for i in ready:
+                if sids[i] & newly:
+                    keys.pop(i, None)
+        for j in succs[best]:
+            npreds[j] -= 1
+            if npreds[j] == 0:
+                ready.append(j)
+    return order
+
+
 def program_signature(steps: Sequence[ProgramStep], p: int,
-                      scratch: Optional[Slot] = None) -> Hashable:
-    """Canonical key of a recorded trace: slot ids renamed by first
-    occurrence across *all* supersteps (a slot reused by two supersteps
-    must keep the same index — cross-superstep dataflow is part of the
-    program), plus per-step attributes and message order."""
+                      scratch: Optional[Slot] = None,
+                      order: Optional[Sequence[int]] = None) -> Hashable:
+    """Canonical key of a recorded trace: steps taken in
+    :func:`canonical_order` — so legal reorderings of the same program
+    share one key — with slot ids renamed by first occurrence across
+    *all* ordered supersteps (a slot reused by two supersteps must keep
+    the same index — cross-superstep dataflow is part of the program),
+    plus per-step attributes and message order."""
+    if order is None:
+        order = canonical_order(steps)
     _, descrs, key = _slot_canon()
     step_sigs = []
-    for st in steps:
+    for i in order:
+        st = steps[i]
         table = tuple((m.src, m.dst, key(m.src_slot), m.src_off,
                        key(m.dst_slot), m.dst_off, m.size, m.origin)
                       for m in st.msgs)
@@ -371,11 +590,7 @@ def _must_precede(a: ProgramStep, b: ProgramStep) -> bool:
     (RAW), ``a`` reads ranges ``b`` writes (WAR — executing ``b`` first
     would leak its writes into ``a``'s reads), or their destination
     ranges overlap (WAW — arbitration order would flip)."""
-    for ma in a.msgs:
-        for mb in b.msgs:
-            if _msgs_conflict(ma, mb):
-                return True
-    return False
+    return _tables_conflict(a.msgs, b.msgs)
 
 
 def dependency_cone(steps: Sequence[ProgramStep], sid: int,
@@ -454,18 +669,89 @@ def _can_overlap(earlier: Sequence[Msg], later: Sequence[Msg]) -> bool:
     return True
 
 
+def _tables_conflict(ta: Sequence[Msg], tb: Sequence[Msg]) -> bool:
+    """Must-precede over rewritten tables (post coalesce/DTE): same
+    relation as :func:`_must_precede`, on message lists."""
+    for ma in ta:
+        for mb in tb:
+            if _msgs_conflict(ma, mb):
+                return True
+    return False
+
+
+def _conflict_dag(tables: Sequence[Sequence[Msg]]) -> List[set]:
+    """``preds[j] = {i < j : tables[i] must precede tables[j]}`` — the
+    single must-precede DAG builder shared by :func:`canonical_order`
+    and the scheduler passes, with a cheap (pid, slot) footprint
+    prefilter: two steps can only conflict when a write footprint meets
+    the other's read or write footprint, so the O(m_a*m_b) interval
+    scan runs only on overlapping footprints."""
+    n = len(tables)
+    reads = [{(m.src, m.src_slot.sid) for m in t} for t in tables]
+    writes = [{(m.dst, m.dst_slot.sid) for m in t} for t in tables]
+    preds: List[set] = [set() for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            if ((writes[i] & reads[j]) or (writes[j] & reads[i])
+                    or (writes[i] & writes[j])) \
+                    and _tables_conflict(tables[i], tables[j]):
+                preds[j].add(i)
+    return preds
+
+
+def _merge_reads_ok(earlier: Sequence[Msg], later: Sequence[Msg]) -> bool:
+    """No message of ``later`` reads a range ``earlier`` writes — the
+    RAW half of merge legality (merged reads observe pre-superstep
+    state; WAR is legal in a merge, WAW is checked by the caller via
+    :func:`repro.core.sync.conflict_free` for method rewrites)."""
+    for m2 in later:
+        for m1 in earlier:
+            if _reads_write(m2, m1):
+                return False
+    return True
+
+
+@dataclasses.dataclass
+class _Group:
+    """Scheduler working state for one output superstep."""
+
+    msgs: List[Msg]
+    attrs: SyncAttributes
+    label: str
+    members: List[int]          # canonical ranks merged into this step
+    plan: SuperstepPlan
+    rewrite: str = ""
+
+
 def optimize_program(steps: Sequence[ProgramStep], p: int,
                      machine: LPFMachine,
                      plan_cache: Optional[PlanCache] = None,
-                     scratch: Optional[Slot] = None) -> SuperstepProgram:
+                     scratch: Optional[Slot] = None,
+                     search: bool = True,
+                     order: Optional[Sequence[int]] = None
+                     ) -> SuperstepProgram:
     """Rewrite one recorded trace: coalesce, eliminate dead transfers,
-    batch adjacent independent supersteps (cost-gated), and plan every
-    surviving superstep.  Pure trace-time Python — no JAX ops."""
+    then run the cost-gated DAG list-scheduling search — non-adjacent
+    superstep batching, Valiant-aware attr rewrites, non-adjacent
+    split-phase overlap grouping — and plan every surviving superstep.
+    Pure trace-time Python — no JAX ops.
+
+    ``search=False`` keeps the trace in recorded order and restores the
+    adjacent-pairs peephole (the pre-search optimizer), as the baseline
+    the schedule benchmarks measure against.  ``order`` is an optional
+    precomputed :func:`canonical_order` (the caller may share one with
+    :func:`program_signature`)."""
     plan = (plan_cache.get_or_plan if plan_cache is not None
             else lambda m, p_, a, s=None: plan_sync(m, p_, a, s))
 
     def plan_of(msgs: List[Msg], attrs: SyncAttributes) -> SuperstepPlan:
         return plan(msgs, p, attrs, scratch)
+
+    if not search:
+        order = list(range(len(steps)))
+    elif order is None:
+        order = canonical_order(steps)
+    steps = [steps[i] for i in order]
 
     tables = [list(st.msgs) for st in steps]
     attrs_list = [st.attrs for st in steps]
@@ -517,80 +803,265 @@ def optimize_program(steps: Sequence[ProgramStep], p: int,
             modified[i] = True
             n_eliminated += len(kill)
 
-    # (3) batch adjacent independent supersteps when the model approves
-    groups: List[Tuple[List[Msg], SyncAttributes, str, List[int]]] = []
-    for i, (msgs, attrs, label) in enumerate(zip(tables, attrs_list,
-                                                 labels)):
-        if groups:
-            cur_msgs, cur_attrs, cur_label, cur_src = groups[-1]
-            if (cur_msgs and msgs and attrs == cur_attrs
-                    and _independent(cur_msgs, msgs, attrs.reduce_op)):
-                cand = cur_msgs + msgs
-                try:
-                    merged_plan = plan_of(cand, attrs)
-                except LPFFatalError:
-                    merged_plan = None      # e.g. bruck multigraph limits
-                if merged_plan is not None and \
-                        _cost_of(merged_plan, machine) < \
-                        _cost_of(plan_of(cur_msgs, cur_attrs), machine) + \
-                        _cost_of(plan_of(msgs, attrs), machine):
-                    groups[-1] = (cand, cur_attrs,
-                                  f"{cur_label}+{label}", cur_src + [i])
-                    continue
-        groups.append((msgs, attrs, label, [i]))
+    n = len(tables)
+    n_hoisted = 0
+    n_rewritten = 0
+
+    def merged_plan_or_none(cand: List[Msg], attrs: SyncAttributes
+                            ) -> Optional[SuperstepPlan]:
+        try:
+            return plan_of(cand, attrs)
+        except LPFFatalError:       # e.g. bruck multigraph limits,
+            return None             # valiant scratch overflow
+
+    def valiant_eligible(attrs: SyncAttributes) -> bool:
+        # a method rewrite must not change CRCW winners or combine
+        # semantics, and needs the context's scratch slot provisioned
+        return (scratch is not None and attrs.reduce_op is None
+                and attrs.compress is None
+                and attrs.method in ("auto", "direct"))
+
+    def valiant_attrs(a: SyncAttributes,
+                      b: Optional[SyncAttributes] = None) -> SyncAttributes:
+        no_conf = a.no_conflict and (b is None or b.no_conflict)
+        return a.replace(method="valiant", no_conflict=no_conf)
+
+    # the rewritten tables are fixed from here on: plan each once (the
+    # growth loop re-scans candidates, and must not re-consult the
+    # planner per scan)
+    step_plans = [plan_of(tables[i], attrs_list[i]) for i in range(n)]
+    # the in-order baseline explain() reports against: untouched steps
+    # reuse their step plan, only coalesced/DTE'd ones re-plan raw msgs
+    in_order_costs = tuple(
+        (step_plans[i] if not modified[i]
+         else plan_of(list(steps[i].msgs), attrs_list[i])).cost
+        for i in range(n))
+
+    def try_merge(g: _Group, j: int) -> bool:
+        """Attempt to fold canonical rank ``j`` into group ``g``; both
+        the equal-attrs merge and the Valiant-aware rewrite are gated on
+        the planned cost of the merged table strictly beating the best
+        alternative schedule of the members — separate supersteps, or
+        (when both commute and are overlappable) a split-phase overlap
+        group, which the later overlap pass could otherwise form."""
+        msgs_j, attrs_j = tables[j], attrs_list[j]
+        if not g.msgs or not msgs_j:
+            return False
+        plan_j = step_plans[j]
+        sep = _cost_of(g.plan, machine) + _cost_of(plan_j, machine)
+        if g.plan.method in OVERLAPPABLE_METHODS \
+                and plan_j.method in OVERLAPPABLE_METHODS \
+                and _can_overlap(g.msgs, msgs_j):
+            sep = min(sep, overlap_cost(
+                [g.plan.cost, plan_j.cost]).predicted_seconds(machine))
+        if not g.rewrite and attrs_j == g.attrs and \
+                _independent(g.msgs, msgs_j, g.attrs.reduce_op):
+            cand = g.msgs + msgs_j
+            mp = merged_plan_or_none(cand, g.attrs)
+            if mp is not None and _cost_of(mp, machine) < sep:
+                g.msgs, g.plan = cand, mp
+                return True
+        # Valiant-aware rewrite: the merge gate refused (differing
+        # attrs, or the merged plan priced higher).  For plain
+        # conflict-free CRCW traffic whose separate schedules are
+        # round-heavy (skewed/fragmented), price the merged fat
+        # superstep routed through two-phase Valiant instead; a method
+        # rewrite is only admissible when arbitration order cannot be
+        # observed (conflict_free) and no member reads another's writes.
+        if valiant_eligible(g.attrs) and valiant_eligible(attrs_j) \
+                and g.plan.cost.rounds + plan_j.cost.rounds \
+                >= VALIANT_REWRITE_MIN_ROUNDS \
+                and _merge_reads_ok(g.msgs, msgs_j):
+            cand = g.msgs + msgs_j
+            if conflict_free(cand):
+                vattrs = valiant_attrs(g.attrs, attrs_j)
+                vp = merged_plan_or_none(cand, vattrs)
+                if vp is not None and _cost_of(vp, machine) < sep:
+                    g.msgs, g.attrs, g.plan = cand, vattrs, vp
+                    g.rewrite = "valiant"
+                    return True
+        return False
+
+    def maybe_valiant_upgrade(g: _Group) -> None:
+        """A skewed/fragmented fat superstep on its own: rewrite its
+        attrs to route it two-phase iff strictly cheaper."""
+        if g.rewrite or not valiant_eligible(g.attrs) \
+                or g.plan.cost.rounds < VALIANT_REWRITE_MIN_ROUNDS \
+                or not conflict_free(g.msgs):
+            return
+        vp = merged_plan_or_none(g.msgs, valiant_attrs(g.attrs))
+        if vp is not None and _cost_of(vp, machine) < \
+                _cost_of(g.plan, machine):
+            g.attrs, g.plan, g.rewrite = valiant_attrs(g.attrs), vp, \
+                "valiant"
+
+    # (3) superstep batching as DAG list scheduling: walk the
+    # must-precede DAG over the rewritten tables; each emitted superstep
+    # greedily absorbs ANY still-unscheduled step whose predecessors are
+    # already placed — non-adjacent independent supersteps hoist over
+    # intervening steps — with every fold cost-gated, and refused folds
+    # offered to the Valiant-aware rewrite.
+    groups: List[_Group] = []
+    if search:
+        preds = _conflict_dag(tables)
+        scheduled: set = set()
+        remaining = list(range(n))
+        while remaining:
+            first = next(k for k in remaining if preds[k] <= scheduled)
+            g = _Group(msgs=tables[first], attrs=attrs_list[first],
+                       label=labels[first], members=[first],
+                       plan=step_plans[first])
+            grew = True
+            while grew:
+                grew = False
+                mset = set(g.members)
+                for j in remaining:
+                    if j in mset or not (preds[j] <= scheduled | mset):
+                        continue
+                    if try_merge(g, j):
+                        # a hoist is non-adjacency in the RECORDED
+                        # order (canonicalization may already have
+                        # moved steps next to each other)
+                        if order[j] != order[g.members[-1]] + 1:
+                            n_hoisted += 1
+                        g.members.append(j)
+                        g.label = f"{g.label}+{labels[j]}"
+                        mset.add(j)
+                        grew = True
+            maybe_valiant_upgrade(g)
+            if g.rewrite:
+                n_rewritten += 1
+            groups.append(g)
+            scheduled |= set(g.members)
+            member_set = set(g.members)
+            remaining = [k for k in remaining if k not in member_set]
+    else:
+        # the adjacent-pairs peephole (pre-search baseline)
+        for i, (msgs, attrs, label) in enumerate(zip(tables, attrs_list,
+                                                     labels)):
+            if groups:
+                g = groups[-1]
+                if (g.msgs and msgs and attrs == g.attrs
+                        and _independent(g.msgs, msgs, attrs.reduce_op)):
+                    cand = g.msgs + msgs
+                    mp = merged_plan_or_none(cand, attrs)
+                    if mp is not None and _cost_of(mp, machine) < \
+                            _cost_of(g.plan, machine) + \
+                            _cost_of(step_plans[i], machine):
+                        g.msgs, g.plan = cand, mp
+                        g.label = f"{g.label}+{label}"
+                        g.members.append(i)
+                        continue
+            groups.append(_Group(msgs=msgs, attrs=attrs, label=label,
+                                 members=[i], plan=step_plans[i]))
     n_merged = len(tables) - len(groups)
 
-    # (4) overlap: adjacent independent supersteps the merge gate kept
-    # separate (differing attrs, or a merged plan the model prices
-    # higher) are issued split-phase instead — all starts, then all
-    # dones — and priced max(h_i)*g + max(rounds_i)*l + (k-1)*l_overlap.
-    # Cost-gated like every rewrite: a group only grows while the
+    # (4) overlap grouping as DAG list scheduling: supersteps the merge
+    # gate kept separate (differing attrs, or a merged plan the model
+    # prices higher) are issued split-phase — all starts, then all
+    # dones — priced max(h_i)*g + max(rounds_i)*l + (k-1)*l_overlap.
+    # The search hoists any READY superstep (all predecessors emitted)
+    # into the group, non-adjacent or not; a group only grows while the
     # overlapped time is predicted below the sequential sum.
-    group_plans = [plan_of(msgs, attrs) for msgs, attrs, _, _ in groups]
+    m = len(groups)
     ogroups: List[List[int]] = []
-    for j, (msgs, attrs, _, _) in enumerate(groups):
-        if ogroups and group_plans[j].method in OVERLAPPABLE_METHODS:
-            cur = ogroups[-1]
-            members_ok = all(
-                group_plans[i].method in OVERLAPPABLE_METHODS
-                and _can_overlap(groups[i][0], msgs) for i in cur)
-            if members_ok:
-                seq = sum(group_plans[i].cost.predicted_seconds(machine)
-                          for i in cur) \
-                    + group_plans[j].cost.predicted_seconds(machine)
-                grouped = overlap_cost(
-                    [group_plans[i].cost for i in cur]
-                    + [group_plans[j].cost]).predicted_seconds(machine)
-                if grouped < seq:
-                    cur.append(j)
-                    continue
-        ogroups.append([j])
+    if search:
+        gpreds = _conflict_dag([g.msgs for g in groups])
+        emitted: set = set()
+        gremaining = list(range(m))
+        while gremaining:
+            i = next(k for k in gremaining if gpreds[k] <= emitted)
+            grp = [i]
+            if groups[i].plan.method in OVERLAPPABLE_METHODS:
+                for j in gremaining:
+                    if j == i or j in grp:
+                        continue
+                    if groups[j].plan.method not in OVERLAPPABLE_METHODS:
+                        continue
+                    # a member of grp is not yet emitted: j must not
+                    # depend on one (its start would read stale state)
+                    if not (gpreds[j] <= emitted):
+                        continue
+                    if not all(_can_overlap(groups[k].msgs,
+                                            groups[j].msgs) for k in grp):
+                        continue
+                    costs = [groups[k].plan.cost for k in grp] \
+                        + [groups[j].plan.cost]
+                    if overlap_cost(costs).predicted_seconds(machine) < \
+                            sum(c.predicted_seconds(machine)
+                                for c in costs):
+                        # recorded-order adjacency, as in the merge pass
+                        if min(order[r] for r in groups[j].members) != \
+                                max(order[r] for r in
+                                    groups[grp[-1]].members) + 1:
+                            n_hoisted += 1
+                        grp.append(j)
+            ogroups.append(grp)
+            emitted |= set(grp)
+            grp_set = set(grp)
+            gremaining = [k for k in gremaining if k not in grp_set]
+    else:
+        for j in range(m):
+            if ogroups and groups[j].plan.method in OVERLAPPABLE_METHODS:
+                cur = ogroups[-1]
+                members_ok = all(
+                    groups[i].plan.method in OVERLAPPABLE_METHODS
+                    and _can_overlap(groups[i].msgs, groups[j].msgs)
+                    for i in cur)
+                if members_ok:
+                    seq = sum(groups[i].plan.cost.predicted_seconds(
+                        machine) for i in cur) \
+                        + groups[j].plan.cost.predicted_seconds(machine)
+                    grouped = overlap_cost(
+                        [groups[i].plan.cost for i in cur]
+                        + [groups[j].plan.cost]).predicted_seconds(machine)
+                    if grouped < seq:
+                        cur.append(j)
+                        continue
+            ogroups.append([j])
     n_overlapped = len(groups) - len(ogroups)
 
+    # emit in the scheduled order: the overlap pass's emission sequence
+    # is the program's execution order; overlap_groups become ranges of
+    # consecutive output positions
+    perm = [i for grp in ogroups for i in grp]
+    out_ogroups: List[Tuple[int, ...]] = []
+    pos = 0
+    for grp in ogroups:
+        out_ogroups.append(tuple(range(pos, pos + len(grp))))
+        pos += len(grp)
+
     _, _, canon_key = _slot_canon()
-    # canonical indices must follow the *raw* trace's first-occurrence
-    # order (what trace_slot_map of a replayed trace reproduces), not the
-    # optimized tables' — an eliminated first occurrence would skew them
+    # canonical indices must follow the (canonically ordered) trace's
+    # first-occurrence order — what trace_slot_map of a replayed trace
+    # reproduces — not the optimized tables' (an eliminated or hoisted
+    # first occurrence would skew them)
     for st in steps:
-        for m in st.msgs:
-            canon_key(m.src_slot)
-            canon_key(m.dst_slot)
+        for msg in st.msgs:
+            canon_key(msg.src_slot)
+            canon_key(msg.dst_slot)
 
     opt_steps = []
-    for (msgs, attrs, label, src_idx), plan in zip(groups, group_plans):
-        table = tuple((m.src, m.dst, canon_key(m.src_slot), m.src_off,
-                       canon_key(m.dst_slot), m.dst_off, m.size, m.origin)
-                      for m in msgs)
+    for gi in perm:
+        g = groups[gi]
+        table = tuple((msg.src, msg.dst, canon_key(msg.src_slot),
+                       msg.src_off, canon_key(msg.dst_slot), msg.dst_off,
+                       msg.size, msg.origin)
+                      for msg in g.msgs)
         opt_steps.append(OptimizedStep(
-            table=table, attrs=attrs, label=label,
-            plan=plan, merged_from=tuple(src_idx),
-            unchanged=len(src_idx) == 1 and not modified[src_idx[0]]))
+            table=table, attrs=g.attrs, label=g.label,
+            plan=g.plan, merged_from=tuple(g.members),
+            unchanged=(len(g.members) == 1 and not modified[g.members[0]]
+                       and not g.rewrite),
+            rewrite=g.rewrite))
     return SuperstepProgram(
         p=p, steps=tuple(opt_steps), n_recorded=len(steps),
         n_coalesced=n_coalesced, n_eliminated=n_eliminated,
         n_merged=n_merged,
-        overlap_groups=tuple(tuple(g) for g in ogroups),
-        n_overlapped=n_overlapped)
+        overlap_groups=tuple(out_ogroups),
+        n_overlapped=n_overlapped, n_rewritten=n_rewritten,
+        n_hoisted=n_hoisted, in_order_costs=in_order_costs,
+        canonical=search)
 
 
 # ==========================================================================
@@ -620,17 +1091,23 @@ class ProgramCache:
     def get_or_build(self, steps: Sequence[ProgramStep], p: int,
                      machine: LPFMachine,
                      plan_cache: Optional[PlanCache] = None,
-                     scratch: Optional[Slot] = None) -> SuperstepProgram:
+                     scratch: Optional[Slot] = None,
+                     order: Optional[Sequence[int]] = None
+                     ) -> SuperstepProgram:
         # the machine's (g, l) keys the cache too: the cost gates price
         # rewrites with them, so contexts over different link classes
         # must not share optimization decisions
-        key = (program_signature(steps, p, scratch), machine.g, machine.l)
+        if order is None:
+            order = canonical_order(steps)
+        key = (program_signature(steps, p, scratch, order),
+               machine.g, machine.l)
         prog = self._programs.get(key)
         if prog is not None:
             self.stats.hits += 1
             self._programs.move_to_end(key)
             return prog
-        prog = optimize_program(steps, p, machine, plan_cache, scratch)
+        prog = optimize_program(steps, p, machine, plan_cache, scratch,
+                                order=order)
         self.stats.misses += 1
         self._programs[key] = prog
         if len(self._programs) > self.maxsize:

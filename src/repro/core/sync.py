@@ -78,7 +78,7 @@ from .memslot import Slot, SlotRegistry
 __all__ = [
     "Msg", "RoundPlan", "SuperstepPlan", "PlanCache", "CacheStats",
     "plan_sync", "plan_signature", "begin_plan", "execute_plan",
-    "execute_overlapped", "execute_sync", "plan_cost",
+    "execute_overlapped", "execute_sync", "plan_cost", "conflict_free",
     "global_plan_cache", "OVERLAPPABLE_METHODS",
 ]
 
@@ -200,6 +200,24 @@ def _conflicts(a: Msg, b: Msg) -> bool:
     return (a.dst == b.dst and a.dst_slot.sid == b.dst_slot.sid
             and a.dst_off < b.dst_off + b.size
             and b.dst_off < a.dst_off + a.size)
+
+
+def conflict_free(msgs: Sequence[Msg]) -> bool:
+    """No two messages of the table write overlapping destination ranges.
+
+    A conflict-free table's final state is independent of write
+    arbitration order, which is the precondition for rewriting its
+    execution *method*: ``direct`` arbitrates by ascending source pid
+    while ``valiant`` phase 2 applies writes in intermediate-pid order,
+    so the optimizer's Valiant-aware attr rewrite is only admissible on
+    tables this predicate accepts (``reduce_op`` tables commute by
+    construction but take no method rewrite — valiant cannot combine)."""
+    msgs = list(msgs)
+    for i, a in enumerate(msgs):
+        for b in msgs[i + 1:]:
+            if _conflicts(a, b):
+                return False
+    return True
 
 
 def _colour_rounds(idxs: Sequence[int], msgs: Sequence[Msg],

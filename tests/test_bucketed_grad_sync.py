@@ -153,6 +153,90 @@ def test_bucketed_overlap_matches_sync_bit_for_bit(mesh8):
 
 
 @pytest.mark.fast
+def test_bucket_staleness_schedule():
+    """Satellite: per-bucket staleness — the last-layer bucket (highest
+    gradient variance) is always fresh; earlier buckets inherit k."""
+    from repro.bsp.grad_sync import bucket_staleness
+    assert bucket_staleness(3, 2) == [2, 2, 0]
+    assert bucket_staleness(1, 4) == [0]
+    assert bucket_staleness(0, 4) == []
+    assert bucket_staleness(3, 0) == [0, 0, 0]
+
+
+@pytest.mark.slow
+def test_bucketed_overlap_reversed_issue_order(mesh8):
+    """Satellite: ``bucketed_overlap`` issues reduce-scatters
+    last-layer-first (matching backward-pass gradient availability):
+    the ledger leads with the last bucket, and the traced module carries
+    the last bucket's (smaller) reduce-scatter before the first
+    bucket's."""
+    import re
+    grads = {"layer0": jnp.arange(256, dtype=jnp.float32),
+             "layer1": jnp.arange(64, dtype=jnp.float32)}
+    specs = jax.tree.map(lambda _: P(), grads)
+    ledger = CostLedger()
+
+    def body(g):
+        return pod_allreduce(g, 8, "x", mean=True, ledger=ledger,
+                             method="bucketed_overlap",
+                             bucket_bytes=256 * 4)
+
+    fn = jax.jit(compat.shard_map(body, mesh=mesh8, in_specs=(specs,),
+                                  out_specs=specs, check_vma=False))
+    lowered = fn.lower(grads).as_text()
+    # ledger order: [rs1][ag1||rs0][ag0] — bucket 1 (the last layer)
+    # leads the schedule
+    labels = [r.label for r in ledger.records]
+    assert labels[0].startswith("pod_allreduce.b1.rs")
+    assert labels[-1].startswith("pod_allreduce.b0.ag")
+    # HLO order: the reduce-scatter of the 64-elem bucket (result
+    # [1, 8] over q=8) is traced before the 256-elem bucket's ([1, 32])
+    rs_shapes = [int(m.group(1)) for m in re.finditer(
+        r"reduce_scatter.*?->\s*tensor<1x(\d+)xf32>", lowered, re.S)]
+    assert rs_shapes == [8, 32], rs_shapes
+    # numerics: still an exact mean (identical grads on every pod)
+    out = fn(grads)
+    for k, v in grads.items():
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(v),
+                                   rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_cross_pod_sync_per_bucket_staleness(mesh_pdm):
+    """Satellite: ``attrs.stale = k`` with buckets skips individual
+    *buckets* on off-steps — the last-layer bucket still syncs every
+    step, earlier buckets keep their pod-local gradients."""
+    from repro.core import SyncAttributes
+    from repro.bsp.grad_sync import build_cross_pod_sync
+
+    grads = {"a": jnp.arange(16, dtype=jnp.float32).reshape(2, 8),
+             "b": jnp.arange(8, dtype=jnp.float32).reshape(2, 4) + 100,
+             "c": jnp.arange(4, dtype=jnp.float32).reshape(2, 2) - 7}
+    specs = {k: P("pod") for k in grads}
+    sync = build_cross_pod_sync(mesh_pdm, specs, pod_axis="pod",
+                                mean=True, bucket_bytes=1,
+                                attrs=SyncAttributes(stale=2))
+
+    def mean_rows(v):
+        m = np.asarray(v).mean(axis=0, keepdims=True)
+        return np.repeat(m, 2, axis=0)
+
+    # off-step: only the last bucket ("c") syncs; "a"/"b" stay local
+    out1 = jax.jit(lambda g: sync(g, step=1))(grads)
+    np.testing.assert_array_equal(np.asarray(out1["a"]),
+                                  np.asarray(grads["a"]))
+    np.testing.assert_array_equal(np.asarray(out1["b"]),
+                                  np.asarray(grads["b"]))
+    np.testing.assert_allclose(np.asarray(out1["c"]),
+                               mean_rows(grads["c"]), rtol=1e-6)
+    # sync step: every bucket averages
+    out0 = jax.jit(lambda g: sync(g, step=2))(grads)
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(out0[k]),
+                                   mean_rows(grads[k]), rtol=1e-6)
+
+
+@pytest.mark.fast
 def test_bucketize_validation():
     """Satellite: clear errors for non-positive bucket sizes; zero-byte
     leaves ride no bucket instead of emitting empty ones."""

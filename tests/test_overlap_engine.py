@@ -115,20 +115,29 @@ def _rs_ag_trace(p, n_buckets, w=4):
 
 
 def test_ddp_bucket_chain_overlaps():
-    """[rs0, ag0, rs1, ag1, rs2, ag2] must group as
-    [rs0][ag0||rs1][ag1||rs2][ag2] — each bucket's all-gather hides the
-    next bucket's reduce-scatter, never its own (data dependence)."""
+    """[rs0, ag0, rs1, ag1, rs2, ag2]: the DAG list-scheduler hoists the
+    cross-bucket reduce-scatters together (they are mutually ready and
+    commute) and then the all-gathers: [rs0||rs1||rs2][ag0||ag1||ag2] —
+    never overlapping a bucket's own all-gather with its reduce-scatter
+    (data dependence).  The adjacent-only peephole could only reach
+    [rs0][ag0||rs1][ag1||rs2][ag2]; the searched schedule must beat it."""
     p = 4
     steps = _rs_ag_trace(p, 3)
     prog = optimize_program(steps, p, MACHINE)
     assert [s.plan.method for s in prog.steps] == \
-        ["fused_rs", "fused_ag"] * 3
-    assert prog.overlap_groups == ((0,), (1, 2), (3, 4), (5,))
-    assert prog.n_overlapped == 2
+        ["fused_rs"] * 3 + ["fused_ag"] * 3
+    assert prog.overlap_groups == ((0, 1, 2), (3, 4, 5))
+    assert prog.n_overlapped == 4
     assert prog.n_merged == 0           # differing attrs: merge refused
-    # the overlapped schedule is predicted strictly faster
+    assert prog.n_hoisted >= 2          # rs2/ag2 hoists were non-adjacent
+    # the overlapped schedule is predicted strictly faster than both the
+    # sequential trace and the adjacent-only peephole's schedule
     seq = sum(s.plan.cost.predicted_seconds(MACHINE) for s in prog.steps)
     assert prog.predicted_seconds(MACHINE) < seq
+    peephole = optimize_program(steps, p, MACHINE, search=False)
+    assert peephole.overlap_groups == ((0,), (1, 2), (3, 4), (5,))
+    assert prog.predicted_seconds(MACHINE) < \
+        peephole.predicted_seconds(MACHINE)
 
 
 def test_dependent_steps_never_overlap():
@@ -241,9 +250,11 @@ def test_overlap_never_regresses_predicted_schedule(seed):
 @pytest.mark.slow
 def test_overlapped_bucket_pipeline_on_mesh(mesh8):
     """Two split-phase allreduces staged in one recorded program: the
-    flush must issue [rs0][ag0||rs1][ag1], produce results identical to
-    two sequential allreduces, and ledger the overlapped superstep as
-    exactly ``overlap_cost`` of its members' plans."""
+    schedule search must issue [rs0||rs1][ag0||ag1] (the reduce-scatters
+    are mutually ready and commute; each all-gather depends only on its
+    own bucket), produce results identical to two sequential allreduces,
+    and ledger each overlap group as exactly ``overlap_cost`` of its
+    members' plans."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -279,11 +290,11 @@ def test_overlapped_bucket_pipeline_on_mesh(mesh8):
         np.testing.assert_array_equal(e, o)
 
     methods = [r.method for r in ledgers[True].records]
-    assert methods == ["fused_rs", "overlap[fused_ag+fused_rs]",
-                       "fused_ag"], methods
+    assert methods == ["overlap[fused_rs+fused_rs]",
+                       "overlap[fused_ag+fused_ag]"], methods
     mid = ledgers[True].records[1]
     assert mid.overlap_extra == 1
-    assert mid.label == "b0.ag||b1.rs"
+    assert mid.label == "b0.ag||b1.ag"
     # ledgered == planned, bit for bit: rebuild the member plans from
     # scratch and compare against the executed overlap record
     w = 1            # 8 elems over p=8
@@ -303,8 +314,11 @@ def test_overlapped_bucket_pipeline_on_mesh(mesh8):
     ag_plan = lpf.plan_sync(ag_msgs, p, lpf.LPF_SYNC_DEFAULT)
     rs_plan = lpf.plan_sync(rs_msgs, p,
                             lpf.SyncAttributes(reduce_op="sum"))
-    fresh = lpf.overlap_cost([ag_plan.cost, rs_plan.cost],
-                             label=mid.label)
-    assert fresh == mid
-    # overlap hides a superstep: one fewer ledger entry than eager
-    assert len(ledgers[True].records) == len(ledgers[False].records) - 1
+    first = ledgers[True].records[0]
+    assert first.label == "b0.rs||b1.rs"
+    assert lpf.overlap_cost([rs_plan.cost, rs_plan.cost],
+                            label=first.label) == first
+    assert lpf.overlap_cost([ag_plan.cost, ag_plan.cost],
+                            label=mid.label) == mid
+    # overlap hides supersteps: 4 eager barriers become 2 groups
+    assert len(ledgers[True].records) == len(ledgers[False].records) - 2
