@@ -42,7 +42,8 @@ def _jobs(fast: bool):
             sizes=((1 << 10, 6),) if fast
             else ((1 << 12, 6), (1 << 14, 6))),
         "roofline": lambda: roofline.main(),
-        "overlap": lambda: program_replay.main(),
+        "overlap": lambda: program_replay.main(compiled=False),
+        "compiled_replay": lambda: program_replay.compiled_replay_main(),
     }
 
 

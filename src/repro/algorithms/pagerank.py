@@ -30,11 +30,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import bsp
-from repro.core import LPFContext, LPF_SYNC_DEFAULT, SyncAttributes, exec_, hook
+from repro.core import LPFContext, LPF_SYNC_DEFAULT, SyncAttributes, exec_
 from .graphs import PartitionedGraph
 
 __all__ = ["lpf_pagerank", "pagerank_spmd", "dataflow_pagerank",
@@ -86,28 +85,28 @@ def pagerank_spmd(ctx: LPFContext, g: PartitionedGraph, shard: dict, *,
 
     def one_iter(ctx2: LPFContext, r: jnp.ndarray, dmass: jnp.ndarray
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        # the whole iteration records as one program: the halo read is a
-        # *dataflow-precise* flush (it executes exactly the halo
-        # superstep's cone, not whatever else the trace holds), so the
-        # halo + score-update pattern keeps independent supersteps —
-        # the nested stats-allreduce pair — recorded across the SpMV
-        # compute barrier, where the DAG schedule search may reorder or
-        # overlap them, and replays per-iteration traces from the
-        # program cache (reordered-but-equivalent recordings of later
-        # iterations canonicalize to the same cache entry)
-        with ctx2.program("pr.iter"):
-            halo = _halo_exchange(ctx2, g, r, attrs, pack_idx)
-            x_ext = jnp.concatenate([r, halo])
-            contrib = vals * x_ext[col_ext]
-            spmv = jax.ops.segment_sum(contrib, row_ids,
-                                       num_segments=rows + 1,
-                                       indices_are_sorted=False)[:rows]
-            r_new = alpha * (spmv + dmass / n) + (1.0 - alpha) / n
-            # fused 3-word allreduce: next dangling mass, residual, (spare)
-            stats = jnp.stack([jnp.sum(r_new * dangling),
-                               jnp.sum(jnp.abs(r_new - r)),
-                               jnp.zeros((), jnp.float32)])
-            tot = reduce3(ctx2, stats)
+        # the whole iteration records as one program (``compile_loop``
+        # opens the trace): the halo read is a *dataflow-precise* flush
+        # (it executes exactly the halo superstep's cone, not whatever
+        # else the trace holds), so the halo + score-update pattern
+        # keeps independent supersteps — the nested stats-allreduce
+        # pair — recorded across the SpMV compute barrier, where the
+        # DAG schedule search may reorder or overlap them, and replays
+        # per-iteration traces from the program cache
+        # (reordered-but-equivalent recordings of later iterations
+        # canonicalize to the same cache entry)
+        halo = _halo_exchange(ctx2, g, r, attrs, pack_idx)
+        x_ext = jnp.concatenate([r, halo])
+        contrib = vals * x_ext[col_ext]
+        spmv = jax.ops.segment_sum(contrib, row_ids,
+                                   num_segments=rows + 1,
+                                   indices_are_sorted=False)[:rows]
+        r_new = alpha * (spmv + dmass / n) + (1.0 - alpha) / n
+        # fused 3-word allreduce: next dangling mass, residual, (spare)
+        stats = jnp.stack([jnp.sum(r_new * dangling),
+                           jnp.sum(jnp.abs(r_new - r)),
+                           jnp.zeros((), jnp.float32)])
+        tot = reduce3(ctx2, stats)
         return r_new, tot[0], tot[1]
 
     # initial dangling mass of the uniform vector
@@ -122,16 +121,18 @@ def pagerank_spmd(ctx: LPFContext, g: PartitionedGraph, shard: dict, *,
         _, _, it, res = carry
         return (it < max_iter) & (res > tol)
 
-    def body(carry):
+    def body(ctx2, carry):
         r, dmass, it, _ = carry
-        def sub(ctx2, s, p, args):
-            return one_iter(ctx2, args[0], args[1])
-        r_new, dnew, res = hook(axes, sub, (r, dmass))
+        r_new, dnew, res = one_iter(ctx2, r, dmass)
         return (r_new, dnew, it + 1, res)
 
-    r, dmass, iters, res = lax.while_loop(
-        cond, body, (r0, d0, jnp.zeros((), jnp.int32),
-                     jnp.full((), jnp.inf, jnp.float32)))
+    # the whole iterated program lowers as ONE XLA While computation
+    # (body traced once, per-iteration superstep costs ledgered once)
+    # instead of a Python-dispatched hook per iteration
+    r, dmass, iters, res = ctx.compile_loop(
+        body, (r0, d0, jnp.zeros((), jnp.int32),
+               jnp.full((), jnp.inf, jnp.float32)),
+        cond=cond, label="pr.iter")
     return r, iters, res
 
 

@@ -111,16 +111,19 @@ def allgather(ctx: LPFContext, x: jnp.ndarray, *,
     w = int(x.shape[0])
     if p == 1:
         return x
-    ctx.resize_memory_register(ctx.registry.n_active + 2)
-    ctx.resize_message_queue(p * p)
-    src = ctx.register_global(f"{label}.src", x)
-    dst = ctx.register_global(f"{label}.dst", jnp.zeros(p * w, x.dtype))
-    ctx.put_msgs([(s, d, src, 0, dst, s * w, w)
-                  for s in range(p) for d in range(p)])
-    ctx.sync(attrs, label=label)
-    out = ctx.tensor(dst)
-    ctx.deregister(src)
-    ctx.deregister(dst)
+    # one-superstep program: repeated allgathers of the same shape replay
+    # the cached (and compiled) trace instead of re-planning the h-relation
+    with ctx.program(label):
+        ctx.resize_memory_register(ctx.registry.n_active + 2)
+        ctx.resize_message_queue(p * p)
+        src = ctx.register_global(f"{label}.src", x)
+        dst = ctx.register_global(f"{label}.dst", jnp.zeros(p * w, x.dtype))
+        ctx.put_msgs([(s, d, src, 0, dst, s * w, w)
+                      for s in range(p) for d in range(p)])
+        ctx.sync(attrs, label=label)
+        out = ctx.tensor(dst)
+        ctx.deregister(src)
+        ctx.deregister(dst)
     return out
 
 
@@ -135,16 +138,18 @@ def alltoall(ctx: LPFContext, x: jnp.ndarray, *,
     if x.shape[0] % p:
         raise LPFFatalError(f"alltoall payload {x.shape[0]} not divisible by p={p}")
     w = x.shape[0] // p
-    ctx.resize_memory_register(ctx.registry.n_active + 2)
-    ctx.resize_message_queue(p * p)
-    src = ctx.register_global(f"{label}.src", x)
-    dst = ctx.register_global(f"{label}.dst", jnp.zeros_like(x))
-    ctx.put_msgs([(s, d, src, d * w, dst, s * w, w)
-                  for s in range(p) for d in range(p)])
-    ctx.sync(attrs, label=label)
-    out = ctx.tensor(dst)
-    ctx.deregister(src)
-    ctx.deregister(dst)
+    # one-superstep program — same caching rationale as allgather
+    with ctx.program(label):
+        ctx.resize_memory_register(ctx.registry.n_active + 2)
+        ctx.resize_message_queue(p * p)
+        src = ctx.register_global(f"{label}.src", x)
+        dst = ctx.register_global(f"{label}.dst", jnp.zeros_like(x))
+        ctx.put_msgs([(s, d, src, d * w, dst, s * w, w)
+                      for s in range(p) for d in range(p)])
+        ctx.sync(attrs, label=label)
+        out = ctx.tensor(dst)
+        ctx.deregister(src)
+        ctx.deregister(dst)
     return out
 
 

@@ -68,7 +68,7 @@ from jax import lax
 from repro.core import (CostLedger, LPF_SYNC_DEFAULT, SuperstepCost,
                         SyncAttributes, overlap_cost)
 
-__all__ = ["pod_allreduce", "bucketize"]
+__all__ = ["pod_allreduce", "bucketize", "lpf_bucketed_allreduce"]
 
 
 def _leaf_bytes(tree) -> int:
@@ -289,3 +289,33 @@ def pod_allreduce(tree, q: int, axis: str = "pod", *,
     if mean:
         acc = jax.tree.map(lambda a: a / q, acc)
     return jax.tree.map(lambda a, l: a.astype(l.dtype), acc, tree)
+
+
+def lpf_bucketed_allreduce(ctx, x: jnp.ndarray, bucket_elems: int, *,
+                           mean: bool = False,
+                           attrs: SyncAttributes = LPF_SYNC_DEFAULT,
+                           label: str = "ddp") -> jnp.ndarray:
+    """Slot-based bucketed allreduce of a flat [n] vector — the DDP
+    bucket pipeline expressed through the core program layer instead of
+    per-leaf pod collectives.
+
+    The vector splits into ceil(n/bucket_elems) buckets; every bucket's
+    reduce-scatter + allgather pair is *started* split-phase before any
+    is finished, so the whole schedule records as ONE program whose
+    schedule search overlaps independent bucket supersteps, and whose
+    replay (for a fixed shape) is a single compiled XLA computation.
+    Used by the compiled-replay benchmark as the representative small-h
+    iterated program."""
+    from repro.bsp.collectives import allreduce_done, allreduce_start
+
+    n = int(x.shape[0])
+    if bucket_elems <= 0:
+        raise ValueError(f"bucket_elems must be positive, got {bucket_elems}")
+    with ctx.program(label):
+        handles = []
+        for k, off in enumerate(range(0, n, bucket_elems)):
+            part = x[off:min(off + bucket_elems, n)]
+            handles.append(allreduce_start(
+                ctx, part, attrs=attrs, label=f"{label}.b{k}"))
+        parts = [allreduce_done(ctx, h, mean=mean) for h in handles]
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]

@@ -29,14 +29,16 @@ from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
 from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
                       LPFMachine, probe)
 from .memslot import Slot, SlotRegistry
-from .program import (OptimizedStep, ProgramCache, ProgramStep,
-                      SuperstepProgram, canonical_order, dependency_cone,
+from .program import (CompiledProgram, OptimizedStep, ProgramCache,
+                      ProgramStep, SuperstepProgram, canonical_order,
+                      compile_program, dependency_cone,
                       global_program_cache, optimize_program,
-                      program_signature, simulate_program)
+                      program_signature, simulate_program, trace_slot_map)
 from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
-                   RoundPlan, SuperstepPlan, begin_plan, conflict_free,
-                   execute_overlapped, execute_plan, global_plan_cache,
-                   plan_cost, plan_sync, plan_signature)
+                   RoundPlan, SuperstepPlan, ValueStore, begin_plan,
+                   conflict_free, execute_overlapped, execute_plan,
+                   execute_schedule, global_plan_cache, plan_cost,
+                   plan_sync, plan_signature)
 from . import compat
 
 __all__ = [
@@ -55,7 +57,8 @@ __all__ = [
     "plan_sync", "plan_signature", "plan_cost", "execute_plan",
     "global_plan_cache", "compat",
     "ProgramStep", "OptimizedStep", "SuperstepProgram", "ProgramCache",
+    "CompiledProgram", "compile_program", "trace_slot_map",
     "program_signature", "optimize_program", "global_program_cache",
-    "simulate_program",
+    "simulate_program", "ValueStore", "execute_schedule",
     "CollectiveStats", "RooflineTerms", "parse_collectives", "roofline_terms",
 ]

@@ -30,8 +30,8 @@ import jax
 
 __all__ = [
     "HAS_AXIS_TYPE", "axis_types_auto", "make_mesh", "set_mesh",
-    "shard_map", "tree_map", "tree_flatten", "tree_unflatten",
-    "tree_leaves", "tree_structure",
+    "shard_map", "scan", "while_loop", "tree_map", "tree_flatten",
+    "tree_unflatten", "tree_leaves", "tree_structure",
 ]
 
 # -- axis types ------------------------------------------------------------
@@ -120,6 +120,28 @@ def _specs_touch_axes(specs, axes: frozenset) -> bool:
             if any(n in axes for n in names if n is not None):
                 hit = True
     return hit
+
+
+# -- structured control flow -----------------------------------------------
+#
+# ``lax.scan``/``lax.while_loop`` are stable across the supported range,
+# but they are the symbols whole-program compilation (compiled
+# SuperstepProgram replay, ``LPFContext.compile_loop``, the fused decode
+# loop) hangs off — routed through here like every other symbol the
+# version story could ever touch, so a future signature change has one
+# place to land.
+
+def scan(f, init, xs, length=None):
+    """``lax.scan`` (body traced once; per-iteration work compiles into
+    ONE XLA ``While`` op instead of a Python-dispatched call per step)."""
+    import jax.lax
+    return jax.lax.scan(f, init, xs, length=length)
+
+
+def while_loop(cond_fun, body_fun, init_val):
+    """``lax.while_loop`` — same single-trace contract as :func:`scan`."""
+    import jax.lax
+    return jax.lax.while_loop(cond_fun, body_fun, init_val)
 
 
 # -- pytree helpers --------------------------------------------------------

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -33,9 +34,10 @@ from .cost import CostLedger, SuperstepCost
 from .errors import LPFCapacityError, LPFFatalError
 from .machine import LPFMachine, HardwareModel, TPU_V5E, probe as _probe
 from .memslot import Slot, SlotRegistry
-from .program import (ProgramCache, ProgramStep, dependency_cone,
-                      global_program_cache)
-from .sync import (Msg, PlanCache, execute_overlapped, execute_plan,
+from .program import (ProgramCache, ProgramStep, compile_program,
+                      dependency_cone, global_program_cache,
+                      trace_slot_map)
+from .sync import (Msg, PlanCache, execute_plan, execute_schedule,
                    global_plan_cache)
 
 __all__ = ["LPFContext", "exec_", "hook", "rehook", "LPF_ROOT_AXES"]
@@ -103,6 +105,13 @@ class LPFContext:
         self._rec_pending: List[ProgramStep] = []
         self._rec_deferred_dereg: List[Slot] = []
         self._gate_machine: Optional[LPFMachine] = None
+        #: lower optimized programs into single jitted XLA computations
+        #: (:class:`repro.core.program.CompiledProgram`) instead of
+        #: Python-dispatched superstep-by-superstep replay; the ledger is
+        #: identical either way (``SuperstepProgram.ledger_costs``).  Set
+        #: ``LPF_COMPILE_PROGRAMS=0`` to force the dispatched path.
+        self.compile_programs: bool = \
+            os.environ.get("LPF_COMPILE_PROGRAMS", "1") != "0"
         #: the most recently executed (optimized) program — inspect the
         #: searched schedule with ``ctx.last_program.explain(machine)``
         self.last_program = None
@@ -329,27 +338,45 @@ class LPFContext:
         supersteps (non-adjacent hoists); ``materialize`` resolves the
         program's canonical ranks against this trace's own canonical
         order, so labels and staged-message reuse stay attached to the
-        right recorded steps whatever order the scheduler emitted."""
+        right recorded steps whatever order the scheduler emitted.
+
+        With :attr:`compile_programs` (the default) the whole schedule
+        runs as ONE jitted computation: slot values flow in, the
+        compiled body issues every superstep, results write back through
+        the registry's validating ``set_value``.  The dispatched path
+        below it executes the same plans through the same
+        ``execute_schedule`` loop, so the two ledgers are bit-for-bit
+        identical — ``ledger_costs`` and ``execute_schedule`` both read
+        the plans' predicted costs."""
         from .program import canonical_order
         order = canonical_order(steps)
-        prog = self.program_cache.get_or_build(
+        prog, key = self.program_cache.get_or_build_keyed(
             steps, self.p, self._machine(), plan_cache=self.plan_cache,
             scratch=self._scratch, order=order)
         self.last_program = prog
         labels = [st.label for st in steps]
-        entries = prog.materialize(steps, labels, order=order)
-        for grp in prog.groups():
-            if len(grp) == 1:
-                msgs, attrs, label, plan = entries[grp[0]]
-                cost = execute_plan(plan, self.registry, msgs, self.p,
-                                    self.axes, self.pid, attrs, label,
-                                    scratch=self._scratch)
-            else:
-                cost = execute_overlapped(
-                    [(entries[i][3], entries[i][0], entries[i][1],
-                      entries[i][2]) for i in grp],
-                    self.registry, self.p, self.axes, self.pid,
-                    scratch=self._scratch)
+        if self.compile_programs:
+            cp = self.program_cache.compiled(key, self.axes)
+            if cp is None:
+                cp = compile_program(prog, steps, order, self.p,
+                                     self.axes, scratch=self._scratch)
+                self.program_cache.set_compiled(key, self.axes, cp)
+            slots = trace_slot_map(steps, order)
+            vals = [self.registry.value(s) for s in slots]
+            scratch_val = self.registry.value(self._scratch) \
+                if cp.scratch is not None else None
+            out_vals, out_scratch = cp(self.pid, vals, scratch_val)
+            for s, v in zip(slots, out_vals):
+                self.registry.set_value(s, v)
+            if cp.scratch is not None:
+                self.registry.set_value(self._scratch, out_scratch)
+            costs = prog.ledger_costs(labels, order)
+        else:
+            entries = prog.materialize(steps, labels, order=order)
+            costs = execute_schedule(entries, prog.groups(),
+                                     self.registry, self.p, self.axes,
+                                     self.pid, scratch=self._scratch)
+        for cost in costs:
             self.ledger.add(cost)
 
     def _drain_deferred_dereg(self) -> None:
@@ -391,6 +418,70 @@ class LPFContext:
                              if i not in cone_set]
         self._execute_steps(steps)
         self._drain_deferred_dereg()
+
+    # ------------------------------------------------------------------
+    # whole-loop compilation
+    # ------------------------------------------------------------------
+    def compile_loop(self, body: Callable[["LPFContext", Any], Any],
+                     carry: Any, *, n_iters: Optional[int] = None,
+                     cond: Optional[Callable[[Any], Any]] = None,
+                     label: str = "loop",
+                     collect: Optional[Callable[[Any], Any]] = None) -> Any:
+        """Roll an iterated LPF program into ONE XLA loop.
+
+        ``body(sub_ctx, carry) -> carry`` runs each iteration's compute
+        and supersteps against a fresh sub-context whose trace records
+        as one program (so the schedule search and the compiled-program
+        path apply per iteration); the loop itself lowers through
+        ``compat.scan`` (``n_iters``) or ``compat.while_loop``
+        (``cond(carry) -> bool``), so N iterations issue as a single
+        XLA ``While`` computation instead of N Python-dispatched calls —
+        the torch_xla ``fori_loop`` pattern.  Exactly one of
+        ``n_iters``/``cond`` must be given.
+
+        The body traces ONCE: its per-iteration superstep costs are
+        appended to this context's ledger once (the BSP model prices one
+        iteration; multiply by the executed trip count for totals —
+        which the trace cannot know for a ``cond`` loop).  With
+        ``collect`` (scan only) each iteration's ``collect(carry)`` is
+        stacked and ``(final_carry, stacked)`` is returned; otherwise
+        just the final carry."""
+        if (n_iters is None) == (cond is None):
+            raise LPFFatalError(
+                "compile_loop needs exactly one of n_iters= or cond=")
+        if collect is not None and cond is not None:
+            raise LPFFatalError(
+                "collect= requires a counted loop (n_iters=): a "
+                "while_loop's trip count is dynamic, so there is "
+                "nothing static to stack into")
+        self._require_active()
+        ledgers: List[CostLedger] = []
+
+        def one(c):
+            sub = LPFContext(self.axes, hardware=self.hardware,
+                             plan_cache=self.plan_cache,
+                             program_cache=self.program_cache,
+                             _parent=self)
+            sub.compile_programs = self.compile_programs
+            ledgers.append(sub.ledger)
+            with sub.program(label):
+                out = body(sub, c)
+            return out
+
+        if cond is not None:
+            final, ys = compat.while_loop(cond, one, carry), None
+        else:
+            def step(c, _):
+                out = one(c)
+                return out, (None if collect is None else collect(out))
+
+            final, ys = compat.scan(step, carry, None, length=n_iters)
+        # guard against a double trace (e.g. dtype promotion in the
+        # carry forcing a re-trace): ledger the first trace only
+        if ledgers:
+            for cost in ledgers[0].records:
+                self.ledger.add(cost)
+        return final if collect is None else (final, ys)
 
     @property
     def cache_stats(self) -> "_CacheStatsView":

@@ -103,12 +103,14 @@ from .errors import LPFFatalError
 from .machine import LPFMachine
 from .memslot import Slot
 from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
-                   SuperstepPlan, conflict_free, plan_sync)
+                   SuperstepPlan, ValueStore, conflict_free,
+                   execute_schedule, plan_sync)
 
 __all__ = [
     "ProgramStep", "OptimizedStep", "SuperstepProgram", "ProgramCache",
-    "global_program_cache", "program_signature", "optimize_program",
-    "simulate_program", "dependency_cone", "canonical_order",
+    "CompiledProgram", "compile_program", "global_program_cache",
+    "program_signature", "optimize_program", "simulate_program",
+    "dependency_cone", "canonical_order", "trace_slot_map",
 ]
 
 #: combined planned rounds at which the scheduler bothers pricing a
@@ -309,6 +311,38 @@ class SuperstepProgram:
             out.append((msgs, st.attrs, label, st.plan))
         return out
 
+    def ledger_costs(self, labels: Optional[Sequence[str]] = None,
+                     order: Optional[Sequence[int]] = None
+                     ) -> List[SuperstepCost]:
+        """The exact ledger entries replaying this program appends, in
+        issue order: one ``plan.cost_with_label`` per singleton group and
+        one :func:`repro.core.cost.overlap_cost` entry per overlap group
+        — precisely what :func:`repro.core.sync.execute_schedule`
+        returns.  Labels resolve the way :meth:`materialize` resolves
+        them (``labels`` in recorded order, ``merged_from`` ranks mapped
+        through ``order``), so the compiled whole-program path — which
+        cannot thread cost records through a jitted body — ledgers
+        bit-for-bit what the step-by-step path would."""
+        out: List[SuperstepCost] = []
+        for grp in self.groups():
+            lbls = []
+            for i in grp:
+                st = self.steps[i]
+                if labels is None:
+                    lbls.append(st.label)
+                else:
+                    lbls.append("+".join(
+                        labels[j if order is None else order[j]]
+                        for j in st.merged_from))
+            if len(grp) == 1:
+                out.append(self.steps[grp[0]].plan.cost_with_label(
+                    lbls[0]))
+            else:
+                out.append(overlap_cost(
+                    [self.steps[i].plan.cost for i in grp],
+                    label="||".join(lbls)))
+        return out
+
 
 # ==========================================================================
 # canonicalization + signatures
@@ -373,6 +407,91 @@ def _sortable_attrs_key(attrs: SyncAttributes) -> Tuple:
             attrs.stale, attrs.valiant_seed)
 
 
+def _structural_ranks(steps: Sequence[ProgramStep],
+                      preds: Sequence[set]) -> List[int]:
+    """Order-invariant structural rank of every step — the canonical-tie
+    break.  Steps with bit-identical content keys can still be
+    structurally distinct: one may feed a later reader (a conflict-DAG
+    successor) or share a slot with a step the other never touches.
+    Recorded position cannot break such ties — two legal reorderings
+    disagree on it, splitting one program into two cache entries — so
+    ties are broken by iterated (Weisfeiler-Leman style) colour
+    refinement over structure only:
+
+    * initial colour: the step's order-free content (attrs footprint +
+      message table with slots named by per-step first occurrence and
+      descriptor — the table *shape*);
+    * refinement relations: directed must-precede edges (identical
+      across legal reorderings — only non-conflicting steps may be
+      reordered) and undirected slot-sharing edges labelled by the
+      (role-set, role-set, descriptor) of each shared slot — read-read
+      sharing creates no DAG edge yet distinguishes a step whose output
+      is observed from an identical one whose output is not.
+
+    Colours are re-ranked to dense ints each round until the partition
+    stabilizes.  Steps left in one colour class are symmetric under
+    both relations: picking either yields the same signature, so the
+    caller's recorded-index fallback is then safe."""
+    n = len(steps)
+
+    def dense_ranks(ks: List[Tuple]) -> List[int]:
+        rank = {k: r for r, k in enumerate(sorted(set(ks)))}
+        return [rank[k] for k in ks]
+
+    def static_key(st: ProgramStep) -> Tuple:
+        local: Dict[int, int] = {}
+
+        def ref(slot: Slot) -> Tuple:
+            li = local.setdefault(slot.sid, len(local))
+            return (slot.size, _dtype_str(slot.dtype), slot.kind, li)
+
+        return (_sortable_attrs_key(st.attrs),
+                tuple((m.src, m.dst, ref(m.src_slot), m.src_off,
+                       ref(m.dst_slot), m.dst_off, m.size, m.origin)
+                      for m in st.msgs))
+
+    colors = dense_ranks([static_key(st) for st in steps])
+
+    descr: Dict[int, Tuple] = {}
+    roles: List[Dict[int, Tuple]] = []
+    for st in steps:
+        rmap: Dict[int, set] = {}
+        for m in st.msgs:
+            rmap.setdefault(m.src_slot.sid, set()).add("r")
+            rmap.setdefault(m.dst_slot.sid, set()).add("w")
+            for slot in (m.src_slot, m.dst_slot):
+                descr.setdefault(slot.sid, (slot.size,
+                                            _dtype_str(slot.dtype),
+                                            slot.kind))
+        roles.append({sid: tuple(sorted(rs)) for sid, rs in rmap.items()})
+
+    edges: List[List[Tuple[Tuple, int]]] = [[] for _ in range(n)]
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            labs: List[Tuple] = []
+            if i in preds[j]:
+                labs.append(("dag", "succ"))
+            if j in preds[i]:
+                labs.append(("dag", "pred"))
+            for sid in roles[i].keys() & roles[j].keys():
+                labs.append(("slot", roles[i][sid], roles[j][sid],
+                             descr[sid]))
+            if labs:
+                edges[i].append((tuple(sorted(labs)), j))
+
+    for _ in range(n):
+        refined = dense_ranks([
+            (colors[i], tuple(sorted((lab, colors[j])
+                                     for lab, j in edges[i])))
+            for i in range(n)])
+        if refined == colors:
+            break
+        colors = refined
+    return colors
+
+
 def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
     """A deterministic topological order of the trace's must-precede DAG,
     chosen by step *content* rather than recorded position: among ready
@@ -383,10 +502,13 @@ def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
     Two recordings that are legal reorderings of each other have the
     same DAG and the same step contents, so they canonicalize to the
     same sequence — which is what lets :func:`program_signature` give
-    them one :class:`ProgramCache` entry.  (Steps with bit-identical
-    content keys fall back to recorded position; such ties are only
-    ambiguous between interchangeable steps, and at worst cost a cache
-    miss, never a wrong schedule.)"""
+    them one :class:`ProgramCache` entry.  Steps with bit-identical
+    content keys are separated by :func:`_structural_ranks` (footprint +
+    table-shape colour refinement over the conflict DAG and slot-sharing
+    relation — order-invariant, so both reorderings break the tie the
+    same way); steps still tied after refinement are symmetric — either
+    choice yields the same signature — and fall back to recorded
+    position."""
     n = len(steps)
     if n <= 1:
         return list(range(n))
@@ -416,6 +538,7 @@ def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
     sids = [{m.src_slot.sid for m in st.msgs}
             | {m.dst_slot.sid for m in st.msgs} for st in steps]
     keys: Dict[int, Tuple] = {}
+    ranks: Optional[List[int]] = None   # lazy: ties are the rare case
     ready = [i for i in range(n) if npreds[i] == 0]
     order: List[int] = []
     while ready:
@@ -423,6 +546,11 @@ def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
             if i not in keys:
                 keys[i] = step_key(steps[i])
         best = min(ready, key=lambda i: (keys[i], i))
+        tied = [i for i in ready if keys[i] == keys[best]]
+        if len(tied) > 1:
+            if ranks is None:
+                ranks = _structural_ranks(steps, preds)
+            best = min(tied, key=lambda i: (ranks[i], i))
         ready.remove(best)
         order.append(best)
         newly: set = set()
@@ -1065,6 +1193,99 @@ def optimize_program(steps: Sequence[ProgramStep], p: int,
 
 
 # ==========================================================================
+# whole-program compilation
+# ==========================================================================
+
+@dataclasses.dataclass
+class CompiledProgram:
+    """An optimized program lowered into ONE jitted function.
+
+    Step-by-step replay pays a Python dispatch (plan lookup, executor
+    re-trace under the outer jit, per-superstep bookkeeping) per issue
+    group; for small-h programs that overhead dominates the modelled
+    cost.  Following the torch_xla ``fori_loop`` / pMR persistent-
+    communication-object pattern, the whole schedule — every superstep
+    *and* the canonical dataflow between them — is traced once against a
+    :class:`repro.core.sync.ValueStore` over canonical slots and jitted;
+    replays feed the actual slot values in and write the results back.
+
+    Validity is anchored to the program signature: the canonical tables
+    name slots by canonical index, the signature pins every index's
+    (size, dtype, kind) descriptor and the scratch descriptor, so any
+    trace that maps to this cache key can run through this function.
+    The ledger is NOT produced inside the jitted body (cost records are
+    static Python); callers append
+    :meth:`SuperstepProgram.ledger_costs`, which is by construction
+    identical to what step-by-step execution returns."""
+
+    prog: SuperstepProgram
+    slots: Tuple[Slot, ...]          # canonical slots, sid == index
+    scratch: Optional[Slot]          # canonical scratch (valiant), or None
+    fn: Callable = dataclasses.field(repr=False, default=None)
+    n_calls: int = 0
+
+    def __call__(self, myid, values, scratch_val=None):
+        self.n_calls += 1
+        if self.scratch is not None:
+            return self.fn(myid, tuple(values), scratch_val)
+        return self.fn(myid, tuple(values)), scratch_val
+
+
+def compile_program(prog: SuperstepProgram, steps: Sequence[ProgramStep],
+                    order: Sequence[int], p: int,
+                    axes: Tuple[str, ...],
+                    scratch: Optional[Slot] = None) -> CompiledProgram:
+    """Lower ``prog`` into a :class:`CompiledProgram` for ``(p, axes)``.
+
+    ``steps``/``order`` are any trace/canonical-order pair matching the
+    program's signature — only their slot *descriptors* are consulted
+    (to synthesize the canonical slot list), so the compiled function is
+    reusable by every trace that hits the same cache entry."""
+    import jax
+
+    actual = trace_slot_map(steps, order)
+    slots = tuple(Slot(i, f"__prog_slot{i}", s.size, s.dtype, s.kind,
+                       (s.size,))
+                  for i, s in enumerate(actual))
+    # valiant phase-1 bounces through the scratch slot; sid -1 cannot
+    # collide with a canonical index
+    need_scratch = any(st.plan.method == "valiant" for st in prog.steps)
+    if need_scratch and scratch is None:
+        raise LPFFatalError("program contains valiant supersteps but the "
+                            "context has no scratch slot")
+    cscratch = Slot(-1, "__prog_scratch", scratch.size, scratch.dtype,
+                    "global", (scratch.size,)) if need_scratch else None
+
+    entries = []
+    for st in prog.steps:
+        # rebuild from the canonical table unconditionally (an
+        # ``unchanged`` step's table IS its staged messages modulo the
+        # slot renaming, and the compiled body must speak canonical sids)
+        msgs = [Msg(src, dst, slots[si], so, slots[di], do, sz,
+                    origin=origin)
+                for (src, dst, si, so, di, do, sz, origin) in st.table]
+        entries.append((msgs, st.attrs, st.label, st.plan))
+    groups = prog.groups()
+
+    if need_scratch:
+        def run(myid, vals, scratch_val):
+            store = ValueStore({s.sid: v for s, v in zip(slots, vals)})
+            store.set_value(cscratch, scratch_val)
+            execute_schedule(entries, groups, store, p, axes, myid,
+                             scratch=cscratch)
+            return (tuple(store.value(s) for s in slots),
+                    store.value(cscratch))
+    else:
+        def run(myid, vals):
+            store = ValueStore({s.sid: v for s, v in zip(slots, vals)})
+            execute_schedule(entries, groups, store, p, axes, myid)
+            return tuple(store.value(s) for s in slots)
+
+    return CompiledProgram(prog=prog, slots=slots, scratch=cscratch,
+                           fn=jax.jit(run))
+
+
+# ==========================================================================
 # the program cache
 # ==========================================================================
 
@@ -1079,6 +1300,11 @@ class ProgramCache:
         self.maxsize = maxsize
         self._programs: "collections.OrderedDict[Hashable, SuperstepProgram]" \
             = collections.OrderedDict()
+        #: program key -> {axes tuple: CompiledProgram}; a compiled
+        #: artifact is only valid alongside its program entry, so
+        #: eviction drops both (LRU coherence)
+        self._compiled: Dict[Hashable, Dict[Tuple[str, ...],
+                                            "CompiledProgram"]] = {}
         self.stats = CacheStats()
 
     def __len__(self) -> int:
@@ -1086,7 +1312,22 @@ class ProgramCache:
 
     def clear(self) -> None:
         self._programs.clear()
+        self._compiled.clear()
         self.stats = CacheStats()
+
+    def compiled(self, key: Hashable,
+                 axes: Sequence[str]) -> Optional["CompiledProgram"]:
+        """The compiled form of the cached program under ``key`` for an
+        axes tuple, if one has been built (compilation is per-axes: the
+        jitted body bakes in the collective axis names)."""
+        return self._compiled.get(key, {}).get(tuple(axes))
+
+    def set_compiled(self, key: Hashable, axes: Sequence[str],
+                     cp: "CompiledProgram") -> None:
+        if key not in self._programs:
+            raise LPFFatalError(
+                "set_compiled for a key with no cached program")
+        self._compiled.setdefault(key, {})[tuple(axes)] = cp
 
     def get_or_build(self, steps: Sequence[ProgramStep], p: int,
                      machine: LPFMachine,
@@ -1094,6 +1335,18 @@ class ProgramCache:
                      scratch: Optional[Slot] = None,
                      order: Optional[Sequence[int]] = None
                      ) -> SuperstepProgram:
+        return self.get_or_build_keyed(steps, p, machine, plan_cache,
+                                       scratch, order)[0]
+
+    def get_or_build_keyed(self, steps: Sequence[ProgramStep], p: int,
+                           machine: LPFMachine,
+                           plan_cache: Optional[PlanCache] = None,
+                           scratch: Optional[Slot] = None,
+                           order: Optional[Sequence[int]] = None
+                           ) -> Tuple[SuperstepProgram, Hashable]:
+        """Like :meth:`get_or_build` but also returns the cache key, the
+        handle :meth:`compiled`/:meth:`set_compiled` attach the jitted
+        whole-program artifact to."""
         # the machine's (g, l) keys the cache too: the cost gates price
         # rewrites with them, so contexts over different link classes
         # must not share optimization decisions
@@ -1105,15 +1358,16 @@ class ProgramCache:
         if prog is not None:
             self.stats.hits += 1
             self._programs.move_to_end(key)
-            return prog
+            return prog, key
         prog = optimize_program(steps, p, machine, plan_cache, scratch,
                                 order=order)
         self.stats.misses += 1
         self._programs[key] = prog
         if len(self._programs) > self.maxsize:
-            self._programs.popitem(last=False)
+            evicted, _ = self._programs.popitem(last=False)
+            self._compiled.pop(evicted, None)
             self.stats.evictions += 1
-        return prog
+        return prog, key
 
 
 _GLOBAL_PROGRAM_CACHE = ProgramCache()

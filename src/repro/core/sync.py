@@ -78,8 +78,9 @@ from .memslot import Slot, SlotRegistry
 __all__ = [
     "Msg", "RoundPlan", "SuperstepPlan", "PlanCache", "CacheStats",
     "plan_sync", "plan_signature", "begin_plan", "execute_plan",
-    "execute_overlapped", "execute_sync", "plan_cost", "conflict_free",
-    "global_plan_cache", "OVERLAPPABLE_METHODS",
+    "execute_overlapped", "execute_schedule", "execute_sync", "plan_cost",
+    "conflict_free", "global_plan_cache", "OVERLAPPABLE_METHODS",
+    "ValueStore",
 ]
 
 AxisNames = Tuple[str, ...]
@@ -1318,6 +1319,53 @@ def execute_overlapped(items: Sequence[Tuple[SuperstepPlan, Sequence[Msg],
         finish()
     return overlap_cost([plan.cost for plan, _, _, _ in items],
                         label="||".join(label for _, _, _, label in items))
+
+
+class ValueStore:
+    """The minimal slot-value surface the executors consume — a
+    duck-type of :class:`repro.core.memslot.SlotRegistry` holding only
+    ``sid -> value``.  Every ``begin_plan`` lowering touches a registry
+    exclusively through ``value``/``set_value``, which is what lets a
+    whole optimized program run against this store inside one jitted
+    function (``repro.core.program.CompiledProgram``): values enter as
+    jit arguments, flow through the schedule as tracers, and leave as
+    jit outputs.  No registration or capacity checks — the real registry
+    re-validates shapes/dtypes when the results are written back."""
+
+    def __init__(self, values: Dict[int, jnp.ndarray]):
+        self._values = dict(values)
+
+    def value(self, slot: Slot) -> jnp.ndarray:
+        return self._values[slot.sid]
+
+    def set_value(self, slot: Slot, value: jnp.ndarray) -> None:
+        self._values[slot.sid] = value
+
+
+def execute_schedule(entries, groups, registry, p: int, axes: AxisNames,
+                     myid, scratch: Optional[Slot] = None
+                     ) -> List[SuperstepCost]:
+    """Issue one optimized program's schedule: ``entries`` are the
+    materialized ``(msgs, attrs, label, plan)`` supersteps and ``groups``
+    the issue partition (singletons via :func:`execute_plan`, overlap
+    groups via :func:`execute_overlapped`).  The single executor loop
+    shared by step-by-step replay and the compiled whole-program path —
+    both produce the returned ledger entries from the same plans, which
+    is what makes the fused ledger bit-for-bit identical to the
+    dispatched one.  ``registry`` may be a :class:`SlotRegistry` or a
+    :class:`ValueStore`."""
+    costs: List[SuperstepCost] = []
+    for grp in groups:
+        if len(grp) == 1:
+            msgs, attrs, label, plan = entries[grp[0]]
+            costs.append(execute_plan(plan, registry, msgs, p, axes, myid,
+                                      attrs, label, scratch=scratch))
+        else:
+            costs.append(execute_overlapped(
+                [(entries[i][3], entries[i][0], entries[i][1],
+                  entries[i][2]) for i in grp],
+                registry, p, axes, myid, scratch=scratch))
+    return costs
 
 
 # ==========================================================================

@@ -22,6 +22,9 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--per-token", action="store_true",
+                    help="dispatch one jitted call per token (the old "
+                         "path) instead of the fused decode loop")
     args = ap.parse_args()
 
     if args.devices:
@@ -51,15 +54,24 @@ def main():
         extra = (enc_out,)
 
     tok = jnp.zeros((args.batch,), jnp.int32)
-    seq = [tok]
-    t0 = time.perf_counter()
-    for pos in range(args.tokens):
-        tok, caches = ss.step_fn(params, caches, tok, jnp.int32(pos),
-                                 *extra)
-        seq.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    toks = jnp.stack(seq, axis=1)
+    if args.per_token:
+        seq = [tok]
+        t0 = time.perf_counter()
+        for pos in range(args.tokens):
+            tok, caches = ss.step_fn(params, caches, tok, jnp.int32(pos),
+                                     *extra)
+            seq.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        toks = jnp.stack(seq, axis=1)
+    else:
+        # fused decode: the whole token loop is ONE XLA While computation
+        decode = ss.decode_fn(args.tokens)
+        t0 = time.perf_counter()
+        rest, caches = decode(params, caches, tok, jnp.int32(0), *extra)
+        jax.block_until_ready(rest)
+        dt = time.perf_counter() - t0
+        toks = jnp.concatenate([tok[None, :], rest], axis=0).T
     print(f"decoded {args.tokens} tokens x batch {args.batch} in "
           f"{dt:.3f}s ({args.tokens * args.batch / dt:.1f} tok/s)")
     print("sample stream:", [int(t) for t in toks[0][:16]])

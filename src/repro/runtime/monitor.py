@@ -56,7 +56,14 @@ class StragglerMonitor:
         # relative floor: sub-10%-of-mean jitter is never a straggle
         std = max(math.sqrt(self.var) if self.var > 0 else 0.0,
                   0.1 * abs(self.mean))
-        z = (duration - self.mean) / max(std, 1e-9)
+        if std <= 0.0:
+            # zero-mean/zero-variance stream (e.g. mocked clocks): any
+            # on-model duration scores 0; only a genuine excursion above
+            # the degenerate mean is an outlier.  Dividing by an epsilon
+            # here would turn float noise into z ~ 1e9.
+            z = 0.0 if duration <= self.mean else math.inf
+        else:
+            z = (duration - self.mean) / std
         straggle = self.n > self.warmup and z > self.z_flag
         if straggle and self.n > self.warmup and z > self.z_skip:
             self.consecutive_skips += 1

@@ -90,7 +90,8 @@ def build_train_step(cfg: ModelConfig, mesh, *,
                      grad_bucket_bytes: Optional[int] = None,
                      grad_accum: int = 1,
                      axis_roles: str = "fsdp_tp",
-                     donate: bool = True) -> TrainStep:
+                     donate: bool = True,
+                     steps_per_call: int = 1) -> TrainStep:
     dp = dp_axes_of(mesh)
     if axis_roles == "dp_all":
         # axis-role remap for small models: the model axis carries extra
@@ -230,8 +231,25 @@ def build_train_step(cfg: ModelConfig, mesh, *,
 
     init_jit = jax.jit(init_fn, out_shardings=(p_shard, o_shard))
 
+    if steps_per_call > 1:
+        # roll K optimizer steps into ONE jitted call: the batch gains a
+        # leading [K] dim and the per-step sync program replays inside a
+        # single XLA While — K steps' worth of supersteps at one Python
+        # dispatch (and one ledger trace)
+        def multi_core(params, opt, batches):
+            def one(carry, batch):
+                p_, o_ = carry
+                p_, o_, m = step_core(p_, o_, batch)
+                return (p_, o_), m
+            (params, opt), metrics = compat.scan(one, (params, opt),
+                                                 batches)
+            return params, opt, metrics   # metrics leaves are [K]
+        core = multi_core
+    else:
+        core = step_core
+
     step_jit = jax.jit(
-        step_core,
+        core,
         donate_argnums=(0, 1) if donate else (),
         in_shardings=(p_shard, o_shard, None),
         out_shardings=(p_shard, o_shard, None),
@@ -252,6 +270,10 @@ class ServeStep:
     param_sharding: Any
     cache_sharding: Any
     rt: Runtime
+    # (n_tokens) -> jitted (params, caches, tok0, pos0[, enc]) ->
+    # (toks [T, B], caches): the whole decode loop as ONE XLA While
+    # instead of a Python-dispatched step per token; memoized per length
+    decode_fn: Any = None
 
 
 def build_serve_step(cfg: ModelConfig, mesh, *, global_batch: int,
@@ -299,5 +321,36 @@ def build_serve_step(cfg: ModelConfig, mesh, *, global_batch: int,
         in_shardings=tuple(in_sh),
         out_shardings=(tok_shard, c_shard),
     )
+
+    toks_shard = NamedSharding(mesh, P(None, batch_axes or None))
+    _decode_cache: dict = {}
+
+    def decode_fn(n_tokens: int):
+        """Jitted whole-sequence greedy decode: scan the per-token step
+        ``n_tokens`` times in one XLA computation (body traced once)."""
+        fn = _decode_cache.get(n_tokens)
+        if fn is not None:
+            return fn
+
+        def decode(params, caches, tok0, pos0, enc_out=None):
+            def one(carry, _):
+                tok, caches, pos = carry
+                nxt, _, caches = decode_step(params, tok, caches, pos,
+                                             cfg, rt, enc_out)
+                return (nxt, caches, pos + 1), nxt
+
+            (_, caches, _), toks = compat.scan(
+                one, (tok0, caches, pos0), None, length=n_tokens)
+            return toks, caches   # toks [n_tokens, B]
+
+        fn = jax.jit(
+            decode,
+            donate_argnums=(1,) if donate_cache else (),
+            in_shardings=tuple(in_sh),
+            out_shardings=(toks_shard, c_shard),
+        )
+        _decode_cache[n_tokens] = fn
+        return fn
+
     return ServeStep(step_fn=step_jit, param_sharding=p_shard,
-                     cache_sharding=c_shard, rt=rt)
+                     cache_sharding=c_shard, rt=rt, decode_fn=decode_fn)

@@ -1,0 +1,81 @@
+"""StragglerMonitor edge cases: warmup, degenerate streams, escalation.
+
+The z-score detector must be well-defined on the streams a real train
+loop produces at its boundaries: the very first step (no model yet),
+constant-duration streams (variance exactly zero), and zero-duration
+streams (mean exactly zero — e.g. mocked clocks in tests), none of
+which may flag, divide by zero, or emit NaN.
+"""
+
+import math
+
+import pytest
+
+from repro.runtime.monitor import StragglerMonitor
+
+pytestmark = pytest.mark.fast
+
+
+def test_first_step_never_flags():
+    m = StragglerMonitor()
+    v = m.record(0, 123.456)
+    assert v.z == 0.0 and not v.straggle and v.action == "ok"
+
+
+def test_constant_duration_stream_stays_ok():
+    """Zero variance: identical durations are on-model by definition."""
+    m = StragglerMonitor(warmup=3)
+    for i in range(50):
+        v = m.record(i, 0.5)
+        assert not v.straggle and v.action == "ok"
+        assert v.z == 0.0 and math.isfinite(v.z)
+
+
+def test_zero_duration_stream_no_blowup_then_spike_detects():
+    """mean == 0 and var == 0: the relative std floor is also 0, so the
+    old epsilon division scored ~1e9 for any float jitter.  On-model
+    steps must score exactly 0; a genuine excursion is still caught."""
+    m = StragglerMonitor(warmup=3)
+    for i in range(10):
+        v = m.record(i, 0.0)
+        assert v.z == 0.0 and not v.straggle and v.action == "ok"
+    spike = m.record(10, 1.0)
+    assert spike.straggle and spike.z == math.inf
+
+
+def test_warmup_suppresses_early_outliers():
+    m = StragglerMonitor(warmup=5)
+    m.record(0, 1.0)
+    # steps 2..warmup: huge excursions, still within warmup
+    for i in range(1, 5):
+        v = m.record(i, 100.0 if i == 3 else 1.0)
+        assert not v.straggle
+    # past warmup the same excursion flags
+    for i in range(5, 10):
+        m.record(i, 1.0)
+    v = m.record(10, 100.0)
+    assert v.straggle
+
+
+def test_genuine_spike_flags_then_skip_then_rescale():
+    m = StragglerMonitor(warmup=3, z_flag=3.0, z_skip=6.0, max_skips=2)
+    for i in range(20):
+        m.record(i, 1.0 + 0.01 * ((-1) ** i))
+    # moderate outlier: flag only (between z_flag and z_skip std floor)
+    v = m.record(20, 1.4)
+    assert v.straggle and v.action == "flag"
+    # hard outliers escalate: skip_sync x max_skips, then rescale
+    actions = [m.record(21 + k, 10.0).action for k in range(4)]
+    assert actions == ["skip_sync", "skip_sync", "rescale", "rescale"]
+    # recovery resets the escalation ladder
+    ok = m.record(30, 1.0)
+    assert ok.action == "ok" and m.consecutive_skips == 0
+
+
+def test_ewma_not_poisoned_by_outliers():
+    m = StragglerMonitor(warmup=3)
+    for i in range(10):
+        m.record(i, 1.0)
+    mean_before = m.mean
+    m.record(10, 50.0)           # straggle: must not enter the EWMA
+    assert m.mean == mean_before

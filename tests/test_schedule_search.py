@@ -562,3 +562,83 @@ def test_canned_trace_costs_within_guard_bounds():
             f"{name}: {s_us:.1f}us > guard {GUARD_BOUNDS_US[name]}us"
         assert s_us < peephole.predicted_seconds(DCN) * 1e6, name
         assert searched.n_hoisted + searched.n_rewritten >= 1, name
+
+
+# ---------------------------------------------------------------------------
+# canonical-order tie-break: bit-identical symmetric steps
+# ---------------------------------------------------------------------------
+
+def test_canonical_tie_break_is_structural():
+    """Two content-identical steps (same msg tuples over fresh slots of
+    the same shape) tie on the content key; the winner must be chosen
+    structurally (conflict-DAG + slot-sharing refinement), not by
+    recorded position — otherwise the two interleavings below number
+    the canonical slots differently and one program costs two
+    ProgramCache entries."""
+    p = 4
+    a1, b1 = make_slot(201, 16), make_slot(202, 16)
+    a2, b2 = make_slot(203, 16), make_slot(204, 16)
+    cs = make_slot(205, 8)
+    attrs = SyncAttributes()
+
+    def shift(src, dst):
+        return ProgramStep(tuple(Msg(s, (s + 1) % p, src, 0, dst, 0, 16)
+                                 for s in range(p)), attrs, "shift")
+
+    A = shift(a1, b1)                 # bit-identical content to B ...
+    B = shift(a2, b2)
+    # ... but C reads A's output — the conflict edge distinguishes them
+    C = ProgramStep(tuple(Msg(s, (s + 1) % p, b1, 0, cs, 0, 8)
+                          for s in range(p)), attrs, "use")
+    rec1 = [A, B, C]
+    rec2 = [B, A, C]                  # a legal reordering (A,B commute)
+
+    ca = canonical_order(rec1)
+    cb = canonical_order(rec2)
+    assert [rec1[i].label for i in ca] == [rec2[i].label for i in cb]
+    assert program_signature(rec1, p) == program_signature(rec2, p)
+
+    cache = ProgramCache()
+    p1 = cache.get_or_build(rec1, p, MACHINE)
+    p2 = cache.get_or_build(rec2, p, MACHINE)
+    assert p1 is p2
+    assert cache.stats.misses == 1 and cache.stats.hits == 1
+
+    # the shared program still executes both recordings correctly
+    slots = [a1, b1, a2, b2, cs]
+    values = initial_values(slots, p, 7)
+    eager = simulate_program([(s.msgs, s.attrs) for s in rec1], values)
+    tables = [(m, a) for m, a, _, _ in p2.materialize(rec2)]
+    opt = simulate_program(tables, values)
+    for sid in eager:
+        assert (eager[sid] == opt[sid]).all(), sid
+
+
+def test_program_cache_lru_semantics():
+    """Hits refresh recency (move_to_end) and eviction counts match:
+    insert maxsize+2 distinct programs while touching the first — the
+    hot entry survives, the two coldest leave, and any compiled
+    artifact leaves with its program."""
+    cache = ProgramCache(maxsize=4)
+    progs = []
+    for k in range(6):
+        # distinct signatures: one step shifting a distinctly-sized slot
+        src = make_slot(300 + 2 * k, 8 + k)
+        dst = make_slot(301 + 2 * k, 8 + k)
+        steps = [ProgramStep(
+            (Msg(0, 1, src, 0, dst, 0, 8 + k),), SyncAttributes(), "s")]
+        if k in (2, 4):
+            # touch the hot entry (k=0) between inserts — at k=4 the
+            # cache is full and k=0 is oldest; without move_to_end the
+            # next two inserts would evict it
+            assert cache.get_or_build(progs[0], 4, MACHINE) is not None
+        prog, key = cache.get_or_build_keyed(steps, 4, MACHINE)
+        cache.set_compiled(key, ("x",), object())
+        progs.append(steps)
+    assert cache.stats.evictions == 2
+    # the hot entry survived 6 inserts into maxsize=4 ...
+    before = cache.stats.misses
+    cache.get_or_build(progs[0], 4, MACHINE)
+    assert cache.stats.misses == before          # hit, not rebuild
+    # ... and the evicted programs took their compiled artifacts along
+    assert len(cache._compiled) == len(cache._programs) == 4

@@ -165,3 +165,57 @@ def test_serve_step_distributed(mesh_pdm):
         tok, caches = ss.step_fn(params, caches, tok, jnp.int32(pos))
     assert tok.shape == (4,)
     assert int(tok.max()) < cfg.vocab
+
+
+def test_steps_per_call_matches_iterated_single_steps():
+    """K steps rolled into one scan == K single-step calls: same params
+    (to optimizer tolerance), metrics stacked [K]."""
+    cfg = tiny_cfg()
+    mesh = mesh_dm()
+    ts1 = build_train_step(cfg, mesh, opt_cfg=AdamWConfig(lr=1e-3),
+                           donate=False)
+    ts3 = build_train_step(cfg, mesh, opt_cfg=AdamWConfig(lr=1e-3),
+                           donate=False, steps_per_call=3)
+    stream = stream_for(cfg)
+    batches = [jax.tree.map(jnp.asarray, stream.batch(i))
+               for i in range(3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+    p_ref, o_ref = ts1.init_fn(jax.random.PRNGKey(0))
+    losses = []
+    for b in batches:
+        p_ref, o_ref, m = ts1.step_fn(p_ref, o_ref, b)
+        losses.append(float(m["loss"]))
+    p0, o0 = ts3.init_fn(jax.random.PRNGKey(0))
+    p_scan, _, metrics = ts3.step_fn(p0, o0, stacked)
+
+    assert metrics["loss"].shape == (3,)
+    np.testing.assert_allclose(np.asarray(metrics["loss"]), losses,
+                               atol=5e-3)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_scan)):
+        diff = float(jnp.abs(a.astype(jnp.float32)
+                             - b.astype(jnp.float32)).max())
+        assert diff < 5e-3, diff
+
+
+def test_serve_decode_fn_matches_per_token(mesh_pdm):
+    """The fused decode loop (one scan) == per-token jitted dispatch."""
+    from repro.models import init_caches, init_params
+    cfg = tiny_cfg()
+    B, L, T = 4, 32, 6
+    ss = build_serve_step(cfg, mesh_pdm, global_batch=B, cache_len=L,
+                          donate_cache=False)
+    params = jax.device_put(init_params(jax.random.PRNGKey(1), cfg),
+                            ss.param_sharding)
+    caches0 = jax.device_put(init_caches(cfg, B, L), ss.cache_sharding)
+    tok0 = jnp.zeros((B,), jnp.int32)
+
+    tok, caches, seq = tok0, caches0, []
+    for pos in range(T):
+        tok, caches = ss.step_fn(params, caches, tok, jnp.int32(pos))
+        seq.append(np.asarray(tok))
+    caches1 = jax.device_put(init_caches(cfg, B, L), ss.cache_sharding)
+    toks, _ = ss.decode_fn(T)(params, caches1, tok0, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(toks), np.stack(seq))
+    # memoized per length
+    assert ss.decode_fn(T) is ss.decode_fn(T)
