@@ -50,8 +50,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 
-from repro.core import (LPF_SYNC_DEFAULT, Msg, ProgramStep, Slot,
-                        SyncAttributes, optimize_program, simulate_program)
+from repro.core import optimize_program, simulate_program
 from repro.core.machine import TPU_V5E, probe
 
 #: the DCN machine every canned trace is priced on
@@ -71,80 +70,12 @@ GUARD_BOUNDS_US = {
 }
 
 
-def _slot(sid, size, dtype="int32"):
-    return Slot(sid=sid, name=f"s{sid}", size=size, dtype=np.dtype(dtype),
-                kind="global", orig_shape=(size,))
-
-
-def canned_fft_trace(p: int = 8, w: int = 64):
-    """Two interleaved FFT instances: redistribute + reorder each, the
-    reorder reading its own redistribute's destination slot."""
-    steps = []
-    slots = []
-    for inst in ("A", "B"):
-        src = _slot(len(slots) + 100, p * w)
-        buf = _slot(len(slots) + 101, p * w)
-        out = _slot(len(slots) + 102, p * w)
-        slots += [src, buf, out]
-        redist = tuple(Msg(s, d, src, d * w, buf, s * w, w)
-                       for s in range(p) for d in range(p))
-        reorder = tuple(Msg(s, d, buf, d * w, out, s * w, w)
-                        for s in range(p) for d in range(p))
-        steps.append(ProgramStep(redist, LPF_SYNC_DEFAULT,
-                                 f"fft{inst}.redistribute"))
-        steps.append(ProgramStep(reorder, LPF_SYNC_DEFAULT,
-                                 f"fft{inst}.reorder"))
-    return p, slots, steps, None
-
-
-def canned_bucketed_trace(p: int = 8, n_buckets: int = 4, w: int = 64):
-    """The DDP bucket shape: per bucket a fused reduce-scatter into a
-    chunk slot, then a fused all-gather of the chunks."""
-    steps = []
-    slots = []
-    sid = 200
-    for k in range(n_buckets):
-        src = _slot(sid, p * w)
-        buf = _slot(sid + 1, w)
-        out = _slot(sid + 2, p * w)
-        sid += 3
-        slots += [src, buf, out]
-        rs = tuple(Msg(s, d, src, d * w, buf, 0, w)
-                   for s in range(p) for d in range(p))
-        ag = tuple(Msg(s, d, buf, 0, out, s * w, w)
-                   for s in range(p) for d in range(p))
-        steps.append(ProgramStep(rs, SyncAttributes(reduce_op="sum"),
-                                 f"b{k}.rs"))
-        steps.append(ProgramStep(ag, LPF_SYNC_DEFAULT, f"b{k}.ag"))
-    return p, slots, steps, None
-
-
-def canned_fragmented_trace(p: int = 8):
-    """Two supersteps spread over 4x4 slot pairs, one message per pair:
-    direct pays one coloured round per pair (16 rounds each).  frag2
-    writes exactly the ranges frag1 *reads* (WAR): commutation fails,
-    so split-phase overlap is inadmissible — and the Valiant-aware
-    rewrite routes each fat superstep two-phase instead (the cost gate
-    declines the *merged* valiant table: 32 messages through p=8
-    intermediates double the via-collisions), consolidating 2x16
-    coloured rounds to 14+12 through the scratch slot."""
-    A = [_slot(300 + i, 32) for i in range(4)]
-    B = [_slot(310 + i, 32) for i in range(4)]
-    C = [_slot(320 + i, 32) for i in range(4)]
-    scratch = _slot(399, 4096)
-    msgs1, msgs2 = [], []
-    for ai in range(4):
-        for bi in range(4):
-            k = 4 * ai + bi
-            m1 = Msg((k * 3) % p, (k * 5 + 1) % p, A[ai], 8 * bi,
-                     B[bi], (k * 3) % 16, 4)
-            msgs1.append(m1)
-            # the mirror: write the exact range m1 reads, on m1's pid
-            msgs2.append(Msg((k * 7 + 2) % p, m1.src, C[bi], 8 * ai,
-                             A[ai], 8 * bi, 4))
-    steps = [ProgramStep(tuple(msgs1), LPF_SYNC_DEFAULT, "frag1"),
-             ProgramStep(tuple(msgs2), LPF_SYNC_DEFAULT, "frag2")]
-    return p, A + B + C, steps, scratch
+# the canned trace builders live in repro.analysis.traces so the
+# static analyzer CLI (``python -m repro.analysis``) lints and
+# verifies exactly the shapes priced here
+from repro.analysis.traces import (canned_bucketed_trace,
+                                   canned_fft_trace,
+                                   canned_fragmented_trace)
 
 
 CANNED = {

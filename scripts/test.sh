@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Test tiers for the LPF reproduction.
 #
-#   scripts/test.sh fast    pure planner/unit tests, seconds, no XLA compile
-#   scripts/test.sh slow    XLA-compiling SPMD tests only
-#   scripts/test.sh tier1   the canonical verification command (full suite)
-#   scripts/test.sh         == tier1
+#   scripts/test.sh fast      pure planner/unit tests, seconds, no XLA compile
+#   scripts/test.sh slow      XLA-compiling SPMD tests only
+#   scripts/test.sh sanitize  full suite under LPF_SANITIZE=1 (repro.analysis)
+#   scripts/test.sh tier1     the canonical verification command (full suite)
+#   scripts/test.sh           == tier1
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,6 +14,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 case "${1:-tier1}" in
   fast)  exec python -m pytest -q -m fast ;;
   slow)  exec python -m pytest -q -m slow ;;
+  sanitize) LPF_SANITIZE=1 exec python -m pytest -q ;;
   tier1) exec python -m pytest -x -q ;;
-  *)     echo "usage: scripts/test.sh [fast|slow|tier1]" >&2; exit 2 ;;
+  *)     echo "usage: scripts/test.sh [fast|slow|sanitize|tier1]" >&2; exit 2 ;;
 esac

@@ -1,0 +1,94 @@
+"""``python -m repro.analysis`` — lint and verify LPF traces from the
+command line.
+
+With no arguments, lints every canned trace (FFT redistribute, bucketed
+gradient sync, fragmented Valiant relation, PageRank iteration),
+optimizes each against the DCN machine model, re-lints the optimized
+program, and verifies the schedule certificate.  Pass canned-trace
+names to restrict the set, or ``--pickle path`` for recorded traces
+saved with :mod:`pickle` (a ``[ProgramStep, ...]`` list, a
+``(p, steps)`` pair, or a ``(p, slots, steps, scratch)`` tuple).
+
+Exit status is 1 iff any error-severity diagnostic fired or a schedule
+failed verification — warnings alone exit 0.  The nightly CI job runs
+this over all canned traces.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pickle
+import sys
+from typing import List, Optional, Tuple
+
+from ..core import ProgramStep, optimize_program
+from ..core.machine import TPU_V5E, probe
+from .linter import ERROR, Diagnostic, lint_program, lint_trace
+from .traces import CANNED_TRACES
+from .verifier import verify_program
+
+#: the machine model traces are optimized against (matches
+#: ``benchmarks/schedule_search.py``)
+DCN = probe({"pod": 8}, TPU_V5E)
+
+
+def _load_pickle(path: str) -> Tuple[int, List[ProgramStep], Optional[object]]:
+    with open(path, "rb") as fh:
+        obj = pickle.load(fh)
+    if isinstance(obj, (list, tuple)) and obj and \
+            all(isinstance(s, ProgramStep) for s in obj):
+        steps = list(obj)
+        p = 1 + max((max(m.src, m.dst) for st in steps for m in st.msgs),
+                    default=0)
+        return p, steps, None
+    if isinstance(obj, tuple) and len(obj) == 2:
+        p, steps = obj
+        return int(p), list(steps), None
+    if isinstance(obj, tuple) and len(obj) == 4:
+        p, _slots, steps, scratch = obj
+        return int(p), list(steps), scratch
+    raise SystemExit(
+        f"{path}: expected a [ProgramStep, ...] list, a (p, steps) pair, "
+        f"or a (p, slots, steps, scratch) tuple; got {type(obj).__name__}")
+
+
+def _analyze(name: str, p: int, steps: List[ProgramStep],
+             scratch) -> Tuple[List[Diagnostic], bool]:
+    diags = list(lint_trace(steps, p, check_dead=True))
+    prog = optimize_program(steps, p, DCN, scratch=scratch)
+    diags += lint_program(prog, steps)
+    report = verify_program(steps, prog, scratch=scratch)
+    diags += report.diagnostics
+    print(f"== {name}: {len(steps)} recorded supersteps, p={p}")
+    for d in diags:
+        print(f"   {d}")
+    print(f"   {report.summary()}")
+    return diags, report.ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="lint and verify LPF program traces")
+    ap.add_argument("traces", nargs="*", choices=[[], *CANNED_TRACES],
+                    help="canned traces to analyze (default: all)")
+    ap.add_argument("--pickle", action="append", default=[],
+                    metavar="PATH", help="pickled recorded trace(s)")
+    args = ap.parse_args(argv)
+
+    jobs = []
+    for name in (args.traces or sorted(CANNED_TRACES)):
+        jobs.append((name, *CANNED_TRACES[name]()))
+    for path in args.pickle:
+        p, steps, scratch = _load_pickle(path)
+        jobs.append((path, p, None, steps, scratch))
+
+    bad = False
+    for name, p, _slots, steps, scratch in jobs:
+        diags, ok = _analyze(name, p, steps, scratch)
+        bad |= (not ok) or any(d.severity == ERROR for d in diags)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,8 @@ from .context import LPFContext, exec_, hook, rehook
 from .cost import (CostLedger, FUSED_METHODS, OVERLAP_L_FRACTION,
                    SuperstepCost, overlap_cost, schedule_seconds)
 from .errors import (LPF_ERR_FATAL, LPF_ERR_OUT_OF_MEMORY, LPF_SUCCESS,
-                     LPFCapacityError, LPFError, LPFFatalError)
+                     LPFAnalysisError, LPFCapacityError, LPFError,
+                     LPFFatalError)
 from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
                            roofline_terms)
 from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
@@ -37,6 +38,7 @@ from .program import (CompiledProgram, OptimizedStep, ProgramCache,
 from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
                    RoundPlan, SuperstepPlan, ValueStore, begin_plan,
                    conflict_free, execute_overlapped, execute_plan,
+                   find_conflict,
                    execute_schedule, global_plan_cache, plan_cost,
                    plan_sync, plan_signature)
 from . import compat
@@ -46,9 +48,10 @@ __all__ = [
     "SyncAttributes", "CompressSpec", "LPF_SYNC_DEFAULT",
     "CostLedger", "SuperstepCost", "FUSED_METHODS",
     "OVERLAP_L_FRACTION", "overlap_cost", "OVERLAPPABLE_METHODS",
-    "schedule_seconds", "conflict_free", "canonical_order",
+    "schedule_seconds", "conflict_free", "find_conflict",
+    "canonical_order",
     "begin_plan", "execute_overlapped", "dependency_cone",
-    "LPFError", "LPFCapacityError", "LPFFatalError",
+    "LPFError", "LPFCapacityError", "LPFFatalError", "LPFAnalysisError",
     "LPF_SUCCESS", "LPF_ERR_OUT_OF_MEMORY", "LPF_ERR_FATAL",
     "HardwareModel", "LinkModel", "LPFMachine", "probe",
     "TPU_V5E", "TPU_V5P", "CPU_HOST",

@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 from . import compat
 from .attrs import LPF_SYNC_DEFAULT, SyncAttributes
 from .cost import CostLedger, SuperstepCost
-from .errors import LPFCapacityError, LPFFatalError
+from .errors import LPFAnalysisError, LPFCapacityError, LPFFatalError
 from .machine import LPFMachine, HardwareModel, TPU_V5E, probe as _probe
 from .memslot import Slot, SlotRegistry
 from .program import (ProgramCache, ProgramStep, compile_program,
@@ -75,6 +75,7 @@ class LPFContext:
                  hardware: HardwareModel = TPU_V5E,
                  plan_cache: Optional[PlanCache] = None,
                  program_cache: Optional[ProgramCache] = None,
+                 sanitize: Optional[bool] = None,
                  _parent: Optional["LPFContext"] = None):
         self.axes: Tuple[str, ...] = tuple(axes)
         if self.axes:
@@ -115,6 +116,20 @@ class LPFContext:
         #: the most recently executed (optimized) program — inspect the
         #: searched schedule with ``ctx.last_program.explain(machine)``
         self.last_program = None
+        #: sanitizer mode (``LPF_SANITIZE=1`` or ``sanitize=True``):
+        #: every staged message is checked against live registrations,
+        #: every flushed trace is linted (``repro.analysis.linter``) —
+        #: error diagnostics raise :class:`LPFAnalysisError` before any
+        #: communication is issued, warnings accumulate on
+        #: :attr:`diagnostics`.  Sub-contexts (hook/compile_loop)
+        #: inherit the parent's setting and diagnostics list.
+        if sanitize is None:
+            sanitize = _parent.sanitize if _parent is not None \
+                else os.environ.get("LPF_SANITIZE", "0") != "0"
+        self.sanitize: bool = bool(sanitize)
+        self.diagnostics: List[Any] = [] if _parent is None \
+            else _parent.diagnostics
+        self._rec_registered: List[Slot] = []
 
     # ------------------------------------------------------------------
     # capacity management: lpf_resize_message_queue / _memory_register
@@ -153,12 +168,21 @@ class LPFContext:
     # registration: lpf_register_{global,local}, lpf_deregister
     # ------------------------------------------------------------------
     def register_global(self, name: str, value, flatten: bool = True) -> Slot:
-        return self.registry.register(name, value, "global", flatten)
+        slot = self.registry.register(name, value, "global", flatten)
+        if self._rec_depth and self.sanitize:
+            self._rec_registered.append(slot)
+        return slot
 
     def register_local(self, name: str, value, flatten: bool = True) -> Slot:
-        return self.registry.register(name, value, "local", flatten)
+        slot = self.registry.register(name, value, "local", flatten)
+        if self._rec_depth and self.sanitize:
+            self._rec_registered.append(slot)
+        return slot
 
     def deregister(self, slot: Slot) -> None:
+        self._rec_registered = [
+            s for s in self._rec_registered
+            if not (s.sid == slot.sid and s.gen == slot.gen)]
         if self._rec_depth and self._pending_refs(slot):
             # a recorded superstep still moves data through this slot;
             # deregistration takes effect when the trace flushes
@@ -182,6 +206,22 @@ class LPFContext:
                 f"message queue capacity {self._queue_capacity} exceeded "
                 f"({len(self._queue)} staged + {len(msgs)} new); call "
                 f"resize_message_queue first")
+        # extents/dtypes/kinds are checked the moment a transfer is
+        # staged — an out-of-bounds put fails at the ``ctx.put`` call
+        # site, not at the (possibly much later) sync or flush
+        for m in msgs:
+            m.validate(self.p)
+        if self.sanitize:
+            for m in msgs:
+                for slot in (m.src_slot, m.dst_slot):
+                    if not slot.gen:
+                        continue   # synthetic handle, never registered
+                    if not self.registry.is_registered(slot) or any(
+                            d.sid == slot.sid and d.gen == slot.gen
+                            for d in self._rec_deferred_dereg):
+                        raise LPFAnalysisError(
+                            f"LPF003: staged transfer uses deregistered "
+                            f"slot {slot}")
         self._queue.extend(msgs)
 
     def put(self, src_slot: Slot, dst_slot: Slot, *, to: PidFn,
@@ -259,12 +299,14 @@ class LPFContext:
             label = f"{prefix}.superstep[{n}]" if prefix \
                 else f"superstep[{n}]"
         if self._rec_depth:
-            for m in self._queue:
-                m.validate(self.p)
+            # messages were validated at stage time (see ``_stage``)
             self._rec_pending.append(
                 ProgramStep(tuple(self._queue), attrs, label))
             self._queue = []
             return None
+        if self.sanitize and self._queue:
+            self._sanitize_lint(
+                [ProgramStep(tuple(self._queue), attrs, label)])
         plan = self.plan_cache.get_or_plan(self._queue, self.p, attrs,
                                            self._scratch)
         cost = execute_plan(plan, self.registry, self._queue, self.p,
@@ -297,6 +339,16 @@ class LPFContext:
         self._rec_labels.pop()
         if self._rec_depth == 0:
             self._flush_program()
+            if self.sanitize and self._rec_registered:
+                from ..analysis.linter import Diagnostic, WARNING
+                for slot in self._rec_registered:
+                    if self.registry.is_registered(slot):
+                        self.diagnostics.append(Diagnostic(
+                            "LPF003", WARNING, -1,
+                            f"slot {slot} registered during the "
+                            f"recording is still registered at "
+                            f"end_record (leak?)"))
+            self._rec_registered = []
 
     @contextlib.contextmanager
     def program(self, label: str = ""):
@@ -354,6 +406,18 @@ class LPFContext:
             steps, self.p, self._machine(), plan_cache=self.plan_cache,
             scratch=self._scratch, order=order)
         self.last_program = prog
+        # every schedule is certified (memoized per cache key) before it
+        # may execute or be compiled; a program the verifier cannot
+        # certify never reaches the wire
+        cert = self.program_cache.certify(key, steps, prog,
+                                          scratch=self._scratch,
+                                          order=order)
+        if not cert.ok:
+            raise LPFAnalysisError(
+                "schedule verification failed; refusing to execute:\n  "
+                + "\n  ".join(str(d) for d in cert.diagnostics))
+        if self.sanitize:
+            self._sanitize_lint(steps, prog, order)
         labels = [st.label for st in steps]
         if self.compile_programs:
             cp = self.program_cache.compiled(key, self.axes)
@@ -378,6 +442,21 @@ class LPFContext:
                                      self.pid, scratch=self._scratch)
         for cost in costs:
             self.ledger.add(cost)
+
+    def _sanitize_lint(self, steps: List[ProgramStep],
+                       prog=None, order=None) -> None:
+        """Sanitizer hook: lint a trace about to execute.  Error
+        diagnostics raise :class:`LPFAnalysisError` (before any
+        communication); warnings accumulate on :attr:`diagnostics`."""
+        from ..analysis.linter import ERROR, lint_program, lint_trace
+        diags = list(lint_trace(steps, self.p, check_dead=False))
+        if prog is not None:
+            diags += lint_program(prog, steps, order=order)
+        errors = [d for d in diags if d.severity == ERROR]
+        if errors:
+            raise LPFAnalysisError(
+                "sanitize: " + "; ".join(str(d) for d in errors))
+        self.diagnostics.extend(diags)
 
     def _drain_deferred_dereg(self) -> None:
         still: List[Slot] = []

@@ -18,6 +18,7 @@ __all__ = [
     "LPFError",
     "LPFCapacityError",
     "LPFFatalError",
+    "LPFAnalysisError",
 ]
 
 LPF_SUCCESS = 0
@@ -42,5 +43,14 @@ class LPFCapacityError(LPFError):
 
 class LPFFatalError(LPFError):
     """Non-mitigable error (malformed message, unregistered slot, ...)."""
+
+    code = LPF_ERR_FATAL
+
+
+class LPFAnalysisError(LPFError):
+    """Raised by the static analyzer (``repro.analysis``) when sanitize
+    mode finds an error-severity diagnostic, or when the schedule
+    verifier refuses to certify an optimized program.  Like fatal
+    errors, raised at trace time before any communication is issued."""
 
     code = LPF_ERR_FATAL

@@ -13,13 +13,20 @@ beyond queue capacity raises a *mitigable* error before any side effect.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+import heapq
+import itertools
+from typing import Any, Dict, List
 
 import jax.numpy as jnp
 
 from .errors import LPFCapacityError, LPFFatalError
 
 __all__ = ["Slot", "SlotRegistry"]
+
+# Registration epochs are process-global so a handle minted by any
+# registry can never collide with a later registration that reuses its
+# slot id — the stale handle is detectable by generation alone.
+_GENERATION = itertools.count(1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +39,7 @@ class Slot:
     dtype: Any
     kind: str            # "global" | "local"
     orig_shape: tuple    # for flatten-registered tensors
+    gen: int = 0         # registration epoch; 0 = synthetic (tests, compile)
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"Slot<{self.name}#{self.sid} {self.kind} "
@@ -46,6 +54,7 @@ class SlotRegistry:
         self._slots: Dict[int, Slot] = {}
         self._values: Dict[int, jnp.ndarray] = {}
         self._next_sid = 0
+        self._free_sids: List[int] = []   # min-heap of deregistered ids
 
     # -- lpf_resize_memory_register -------------------------------------
     def resize(self, capacity: int) -> None:
@@ -66,9 +75,13 @@ class SlotRegistry:
             value = value.reshape(-1)
         elif value.ndim != 1:
             raise LPFFatalError("slots are 1-D; pass flatten=True for tensors")
-        slot = Slot(self._next_sid, name, int(value.shape[0]), value.dtype,
-                    kind, tuple(orig_shape))
-        self._next_sid += 1
+        if self._free_sids:
+            sid = heapq.heappop(self._free_sids)
+        else:
+            sid = self._next_sid
+            self._next_sid += 1
+        slot = Slot(sid, name, int(value.shape[0]), value.dtype,
+                    kind, tuple(orig_shape), next(_GENERATION))
         self._slots[slot.sid] = slot
         self._values[slot.sid] = value
         return slot
@@ -78,11 +91,22 @@ class SlotRegistry:
         self._check(slot)
         del self._slots[slot.sid]
         del self._values[slot.sid]
+        heapq.heappush(self._free_sids, slot.sid)
 
     # -- value plumbing ----------------------------------------------------
     def _check(self, slot: Slot) -> None:
         if slot.sid not in self._slots:
             raise LPFFatalError(f"slot {slot} is not registered")
+        live = self._slots[slot.sid]
+        if live is not slot and live.gen != slot.gen:
+            raise LPFFatalError(
+                f"stale handle {slot}: slot id {slot.sid} was deregistered "
+                f"and re-registered as {live}")
+
+    def is_registered(self, slot: Slot) -> bool:
+        """True iff *this exact handle* (id + generation) is live."""
+        live = self._slots.get(slot.sid)
+        return live is not None and (live is slot or live.gen == slot.gen)
 
     def value(self, slot: Slot) -> jnp.ndarray:
         self._check(slot)

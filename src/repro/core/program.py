@@ -93,13 +93,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Hashable, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from .attrs import SyncAttributes
 from .cost import SuperstepCost, overlap_cost, schedule_seconds
-from .errors import LPFFatalError
+from .errors import LPFAnalysisError, LPFFatalError
 from .machine import LPFMachine
 from .memslot import Slot
 from .sync import (CacheStats, Msg, OVERLAPPABLE_METHODS, PlanCache,
@@ -201,11 +202,16 @@ class SuperstepProgram:
         return sum(c.predicted_seconds(machine)
                    for c in self.in_order_costs)
 
-    def explain(self, machine: Optional[LPFMachine] = None) -> str:
+    def explain(self, machine: Optional[LPFMachine] = None,
+                steps: Optional[Sequence["ProgramStep"]] = None,
+                scratch: Optional[Slot] = None) -> str:
         """Human-readable rendering of the searched schedule: issue
         groups with member labels, merges/hoists/attr rewrites applied,
         and (when ``machine`` is given) the predicted BSP time of every
-        group plus the in-order-vs-scheduled comparison."""
+        group plus the in-order-vs-scheduled comparison.  The last line
+        is the schedule verifier's certificate summary — computed
+        fresh from the recorded ``steps`` when given, else the one
+        :meth:`ProgramCache.certify` attached."""
         lines = [
             f"SuperstepProgram: {self.n_recorded} recorded -> "
             f"{len(self.steps)} supersteps in {len(self.groups())} "
@@ -242,6 +248,12 @@ class SuperstepProgram:
             lines.append(
                 f"  in-order BSP time {in_order * 1e6:.2f}us -> "
                 f"scheduled {sched * 1e6:.2f}us  ({ratio:.2f}x)")
+        cert = getattr(self, "_certificate", None)
+        if steps is not None:
+            from ..analysis.verifier import verify_program
+            cert = verify_program(steps, self, scratch=scratch)
+        if cert is not None:
+            lines.append(f"  {cert.summary()}")
         return "\n".join(lines)
 
     def slot_map(self, steps: Sequence[ProgramStep]) -> List[Slot]:
@@ -1305,6 +1317,10 @@ class ProgramCache:
         #: eviction drops both (LRU coherence)
         self._compiled: Dict[Hashable, Dict[Tuple[str, ...],
                                             "CompiledProgram"]] = {}
+        #: program key -> schedule-verifier certificate
+        #: (:class:`repro.analysis.VerifierReport`); ``set_compiled``
+        #: refuses keys without a passing one
+        self._certs: Dict[Hashable, Any] = {}
         self.stats = CacheStats()
 
     def __len__(self) -> int:
@@ -1313,6 +1329,7 @@ class ProgramCache:
     def clear(self) -> None:
         self._programs.clear()
         self._compiled.clear()
+        self._certs.clear()
         self.stats = CacheStats()
 
     def compiled(self, key: Hashable,
@@ -1327,7 +1344,45 @@ class ProgramCache:
         if key not in self._programs:
             raise LPFFatalError(
                 "set_compiled for a key with no cached program")
+        cert = self._certs.get(key)
+        if cert is None:
+            raise LPFAnalysisError(
+                "set_compiled for an uncertified program: call "
+                "ProgramCache.certify(key, steps) first — compiled "
+                "artifacts are only cached for verified schedules")
+        if not cert.ok:
+            raise LPFAnalysisError(
+                "set_compiled for a program whose schedule failed "
+                f"verification: {cert.summary()}")
         self._compiled.setdefault(key, {})[tuple(axes)] = cp
+
+    def certify(self, key: Hashable, steps: Sequence[ProgramStep],
+                prog: Optional[SuperstepProgram] = None,
+                scratch: Optional[Slot] = None,
+                order: Optional[Sequence[int]] = None):
+        """Run the schedule verifier on the cached program under
+        ``key`` against its recorded trace and memoize the resulting
+        :class:`repro.analysis.VerifierReport`.  ``scratch``/``order``
+        must match what :meth:`get_or_build_keyed` optimized with.
+        Idempotent per key; :meth:`set_compiled` requires a passing
+        certificate."""
+        cert = self._certs.get(key)
+        if cert is not None:
+            return cert
+        if prog is None:
+            prog = self._programs.get(key)
+        if prog is None:
+            raise LPFFatalError("certify for a key with no cached program")
+        from ..analysis.verifier import verify_program
+        cert = verify_program(steps, prog, scratch=scratch, order=order)
+        self._certs[key] = cert
+        object.__setattr__(prog, "_certificate", cert)
+        return cert
+
+    def certificate(self, key: Hashable):
+        """The memoized certificate for ``key``, or ``None`` if
+        :meth:`certify` has not run."""
+        return self._certs.get(key)
 
     def get_or_build(self, steps: Sequence[ProgramStep], p: int,
                      machine: LPFMachine,
@@ -1366,6 +1421,7 @@ class ProgramCache:
         if len(self._programs) > self.maxsize:
             evicted, _ = self._programs.popitem(last=False)
             self._compiled.pop(evicted, None)
+            self._certs.pop(evicted, None)
             self.stats.evictions += 1
         return prog, key
 

@@ -79,8 +79,8 @@ __all__ = [
     "Msg", "RoundPlan", "SuperstepPlan", "PlanCache", "CacheStats",
     "plan_sync", "plan_signature", "begin_plan", "execute_plan",
     "execute_overlapped", "execute_schedule", "execute_sync", "plan_cost",
-    "conflict_free", "global_plan_cache", "OVERLAPPABLE_METHODS",
-    "ValueStore",
+    "conflict_free", "find_conflict", "global_plan_cache",
+    "OVERLAPPABLE_METHODS", "ValueStore",
 ]
 
 AxisNames = Tuple[str, ...]
@@ -213,12 +213,19 @@ def conflict_free(msgs: Sequence[Msg]) -> bool:
     so the optimizer's Valiant-aware attr rewrite is only admissible on
     tables this predicate accepts (``reduce_op`` tables commute by
     construction but take no method rewrite — valiant cannot combine)."""
+    return find_conflict(msgs) is None
+
+
+def find_conflict(msgs: Sequence[Msg]) -> Optional[Tuple[Msg, Msg]]:
+    """First pair of messages writing overlapping destination ranges,
+    or ``None`` for a conflict-free table.  The witness pair is what the
+    linter reports when a user-asserted ``no_conflict`` table races."""
     msgs = list(msgs)
     for i, a in enumerate(msgs):
         for b in msgs[i + 1:]:
             if _conflicts(a, b):
-                return False
-    return True
+                return (a, b)
+    return None
 
 
 def _colour_rounds(idxs: Sequence[int], msgs: Sequence[Msg],

@@ -633,6 +633,7 @@ def test_program_cache_lru_semantics():
             # next two inserts would evict it
             assert cache.get_or_build(progs[0], 4, MACHINE) is not None
         prog, key = cache.get_or_build_keyed(steps, 4, MACHINE)
+        assert cache.certify(key, steps).ok
         cache.set_compiled(key, ("x",), object())
         progs.append(steps)
     assert cache.stats.evictions == 2
@@ -641,4 +642,6 @@ def test_program_cache_lru_semantics():
     cache.get_or_build(progs[0], 4, MACHINE)
     assert cache.stats.misses == before          # hit, not rebuild
     # ... and the evicted programs took their compiled artifacts along
+    # (and their verifier certificates)
     assert len(cache._compiled) == len(cache._programs) == 4
+    assert len(cache._certs) == 4
