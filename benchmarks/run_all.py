@@ -30,7 +30,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 def _jobs(fast: bool):
     from . import (allreduce, fft, hrelation, messages, pagerank,
-                   program_replay, roofline, schedule_search)
+                   program_replay, roofline, schedule_search, warm_start)
     return {
         "scheduler": lambda: schedule_search.main(),
         "hrelation": lambda: hrelation.main(),
@@ -44,6 +44,7 @@ def _jobs(fast: bool):
         "roofline": lambda: roofline.main(),
         "overlap": lambda: program_replay.main(compiled=False),
         "compiled_replay": lambda: program_replay.compiled_replay_main(),
+        "warm_start": lambda: warm_start.main(),
     }
 
 

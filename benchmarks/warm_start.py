@@ -1,0 +1,164 @@
+"""Cross-process warm start from the persistent program cache.
+
+The persistence claim of the program-cache PR, measured end to end: a
+process records LPF programs with ``LPF_PROGRAM_CACHE_DIR`` set, exits,
+and a *fresh* process replaying the same traces must
+
+* re-plan nothing (plan-cache misses == 0),
+* re-search nothing (program-cache misses == 0, every program a disk
+  hit re-certified by the schedule verifier), and
+* produce a ledger bit-for-bit identical to the recording process's —
+  the warm start changes where the schedule comes from, never what is
+  executed or charged.
+
+Run as a parent (no ``--phase``) it spawns the two child processes
+itself and asserts all three properties, then reports cold vs warm
+trace-time wall clock.  The nightly CI job runs exactly this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+P_AXIS = 8
+
+
+def _workload(ctx, p):
+    """Two recorded programs per run: a two-shift exchange and a
+    scatter-style fan-out — distinct signatures, so a warm start must
+    hit the store twice."""
+    import jax.numpy as jnp
+
+    ctx.resize_memory_register(3)
+    ctx.resize_message_queue(2 * p)
+    a = ctx.register_global("a", jnp.arange(4.0) + ctx.pid)
+    b = ctx.register_global("b", jnp.zeros(8))
+    c = ctx.register_global("c", jnp.zeros(4))
+    with ctx.program("shifts"):
+        ctx.put(a, b, to=lambda s: (s + 1) % p, size=4)
+        ctx.sync(label="shift1")
+        ctx.put(a, b, to=lambda s: (s + 2) % p, dst_off=4, size=4)
+        ctx.sync(label="shift2")
+    with ctx.program("gather"):
+        ctx.put(a, c, to=lambda s: (s + 3) % p, size=4)
+        ctx.sync(label="shift3")
+    return ctx.value(b) + ctx.value(c).sum()
+
+
+def run_phase(out_path: str) -> dict:
+    """One child process: trace + execute the workload, then dump the
+    cache counters, the ledger, and the numeric result as JSON.  The
+    persistent cache directory arrives via ``LPF_PROGRAM_CACHE_DIR`` —
+    the environment contract a production worker would use."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import core as lpf
+    from repro.core import compat, global_plan_cache, global_program_cache
+
+    mesh = compat.make_mesh((P_AXIS,), ("x",))
+
+    def spmd(ctx, s, p, _):
+        return _workload(ctx, p)
+
+    t0 = time.perf_counter()
+    out, ledger = lpf.exec_(mesh, spmd, None, out_specs=P("x"),
+                            return_ledger=True)
+    jax.block_until_ready(out)
+    wall = time.perf_counter() - t0
+
+    prog_stats = global_program_cache().stats
+    payload = {
+        "wall_s": wall,
+        "plan_misses": global_plan_cache().stats.misses,
+        "program_misses": prog_stats.misses,
+        "program_disk_hits": prog_stats.disk_hits,
+        "program_disk_misses": prog_stats.disk_misses,
+        "program_invalidated": prog_stats.invalidated,
+        "ledger": [dataclasses.asdict(r) for r in ledger.records],
+        "result": [float(v) for v in out.reshape(-1)],
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh)
+    return payload
+
+
+def _spawn(phase: str, cache_dir: str, out_path: str) -> dict:
+    env = dict(os.environ,
+               LPF_PROGRAM_CACHE_DIR=cache_dir,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--phase", phase, "--out", out_path],
+        env=env, check=True, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+    with open(out_path) as fh:
+        return json.load(fh)
+
+
+def main(csv: bool = True, cache_dir: str = None) -> list:
+    tmp = None
+    if cache_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="lpf_warm_start_")
+        cache_dir = tmp.name
+    try:
+        with tempfile.TemporaryDirectory() as outdir:
+            cold = _spawn("record", cache_dir,
+                          os.path.join(outdir, "cold.json"))
+            warm = _spawn("replay", cache_dir,
+                          os.path.join(outdir, "warm.json"))
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    # the recording process must have actually searched and persisted
+    assert cold["program_misses"] >= 2, cold
+    assert cold["program_disk_hits"] == 0, cold
+    # the fresh process: zero re-plans, zero re-searches, all disk hits
+    assert warm["program_misses"] == 0, \
+        f"warm start re-ran the schedule search: {warm}"
+    assert warm["plan_misses"] == 0, \
+        f"warm start re-planned a superstep: {warm}"
+    assert warm["program_disk_hits"] >= 2, warm
+    assert warm["program_invalidated"] == 0, warm
+    # same schedule, same charge: ledger and numerics bit-for-bit
+    assert warm["ledger"] == cold["ledger"], (cold["ledger"],
+                                              warm["ledger"])
+    assert warm["result"] == cold["result"]
+
+    rows = [("warm_start", "cold", cold["program_misses"],
+             cold["program_disk_hits"], f"{cold['wall_s'] * 1e3:.1f}"),
+            ("warm_start", "warm", warm["program_misses"],
+             warm["program_disk_hits"], f"{warm['wall_s'] * 1e3:.1f}")]
+    if csv:
+        print("bench,phase,search_misses,disk_hits,trace_ms")
+        for row in rows:
+            print(",".join(str(x) for x in row))
+        print(f"# fresh-process replay: 0 re-plans, 0 searches, "
+              f"{warm['program_disk_hits']} verified disk hits, ledger "
+              f"bit-for-bit ({len(warm['ledger'])} records); trace time "
+              f"{cold['wall_s'] / warm['wall_s']:.2f}x vs cold")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--phase", choices=["record", "replay"])
+    ap.add_argument("--out")
+    ap.add_argument("--cache-dir")
+    args = ap.parse_args()
+    if args.phase:
+        stats = run_phase(args.out or os.path.join(
+            tempfile.gettempdir(), f"warm_start_{args.phase}.json"))
+        print(f"{args.phase}: {json.dumps({k: v for k, v in stats.items() if k not in ('ledger', 'result')})}")
+    else:
+        main(cache_dir=args.cache_dir)

@@ -38,12 +38,26 @@ def _tree_paths(tree):
     return flat, treedef
 
 
+def _sweep_stale_tmp(directory: str, keep: Optional[str] = None) -> None:
+    """Remove crash-abandoned ``.tmp_step_*`` staging dirs.  A temp dir
+    only exists while a save is in flight (it is renamed into place on
+    publish), so any found here — other than ``keep``, the one the
+    caller is about to write — was orphaned by a crash and would
+    otherwise accumulate forever (``_gc`` only matches ``step_*``)."""
+    if not os.path.isdir(directory):
+        return
+    for d in os.listdir(directory):
+        if d.startswith(".tmp_step_") and d != keep:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
 def save(directory: str, step: int, tree: Any, meta: Optional[dict] = None
          ) -> str:
     """Synchronous atomic save.  Returns the published path."""
     flat, treedef = _tree_paths(tree)
     tmp = os.path.join(directory, f".tmp_step_{step}")
     final = os.path.join(directory, f"step_{step}")
+    _sweep_stale_tmp(directory, keep=os.path.basename(tmp))
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
@@ -106,6 +120,8 @@ class AsyncCheckpointer:
     """Overlaps serialisation with training; keeps the last K steps."""
 
     def __init__(self, directory: str, keep: int = 3):
+        if keep < 0:
+            raise ValueError(f"keep must be >= 0, got {keep}")
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
@@ -136,9 +152,15 @@ class AsyncCheckpointer:
             raise err
 
     def _gc(self):
+        _sweep_stale_tmp(self.directory)
         steps = sorted(int(d.split("_")[1])
                        for d in os.listdir(self.directory)
                        if d.startswith("step_"))
-        for s in steps[:-self.keep]:
+        # NOT steps[:-self.keep]: with keep=0 that is the empty slice
+        # (nothing would ever be deleted) instead of "keep none"; the
+        # max() guard keeps the bound non-negative when fewer than
+        # ``keep`` checkpoints exist (a negative bound would slice from
+        # the end and delete the oldest ones)
+        for s in steps[:max(0, len(steps) - self.keep)]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
                           ignore_errors=True)

@@ -30,6 +30,7 @@ from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
 from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
                       LPFMachine, probe)
 from .memslot import Slot, SlotRegistry
+from .persist import PersistentStore, PersistError, steps_from_signature
 from .program import (CompiledProgram, OptimizedStep, ProgramCache,
                       ProgramStep, SuperstepProgram, canonical_order,
                       compile_program, dependency_cone,
@@ -63,5 +64,6 @@ __all__ = [
     "CompiledProgram", "compile_program", "trace_slot_map",
     "program_signature", "optimize_program", "global_program_cache",
     "simulate_program", "ValueStore", "execute_schedule",
+    "PersistentStore", "PersistError", "steps_from_signature",
     "CollectiveStats", "RooflineTerms", "parse_collectives", "roofline_terms",
 ]

@@ -75,6 +75,7 @@ class LPFContext:
                  hardware: HardwareModel = TPU_V5E,
                  plan_cache: Optional[PlanCache] = None,
                  program_cache: Optional[ProgramCache] = None,
+                 persist_dir: Optional[str] = None,
                  sanitize: Optional[bool] = None,
                  _parent: Optional["LPFContext"] = None):
         self.axes: Tuple[str, ...] = tuple(axes)
@@ -94,6 +95,18 @@ class LPFContext:
         #: memoised optimized traces for the record/replay program layer
         self.program_cache = program_cache if program_cache is not None \
             else global_program_cache()
+        #: persistent program cache (``persist_dir=`` or the
+        #: ``LPF_PROGRAM_CACHE_DIR`` env var): certified optimized
+        #: programs are written next to the XLA compilation cache and
+        #: warm-loaded by any later context/process sharing the
+        #: directory — a restarted worker pays zero re-planning and
+        #: zero schedule-search cost.  Loaded entries are re-verified
+        #: (``verify_program``) against the actual recorded trace
+        #: before they may execute or compile.
+        if persist_dir is None and _parent is None:
+            persist_dir = os.environ.get("LPF_PROGRAM_CACHE_DIR") or None
+        if persist_dir:
+            self.program_cache.attach_store(persist_dir)
         self.registry = SlotRegistry(capacity=0)
         self.ledger = CostLedger()
         self._queue: List[Msg] = []

@@ -120,6 +120,15 @@ __all__ = [
 #: is reserved for skewed/fragmented fat schedules
 VALIANT_REWRITE_MIN_ROUNDS = 4
 
+#: completions the canonical-form tie-break may explore per trace:
+#: ties that survive :func:`_structural_ranks` (WL-equivalent but
+#: non-automorphic steps — e.g. a hexagon and two triangles of
+#: slot-sharing between bit-identical steps refine to one colour) are
+#: broken by *comparing the finished signatures* of each candidate's
+#: completion; the budget bounds the branching on adversarially
+#: symmetric traces, beyond which the recorded-index fallback applies
+TIE_BRANCH_BUDGET = 256
+
 #: canonical message: (src, dst, src_slot_idx, src_off, dst_slot_idx,
 #: dst_off, size, origin) with slot indices assigned by first occurrence
 #: across the whole trace
@@ -504,6 +513,25 @@ def _structural_ranks(steps: Sequence[ProgramStep],
     return colors
 
 
+def _order_sig(steps: Sequence[ProgramStep],
+               order: Sequence[int]) -> Tuple:
+    """Totally-ordered content signature of a completed order — what the
+    canonical-form tie-break compares.  Same renaming discipline as
+    :func:`program_signature` (slots by first occurrence across the
+    ordered trace) but with :func:`_sortable_attrs_key` so candidate
+    signatures compare under ``min`` even when attrs hold ``None`` or
+    :class:`CompressSpec` fields."""
+    _, _, key = _slot_canon()
+    out = []
+    for i in order:
+        st = steps[i]
+        out.append((_sortable_attrs_key(st.attrs),
+                    tuple((m.src, m.dst, key(m.src_slot), m.src_off,
+                           key(m.dst_slot), m.dst_off, m.size, m.origin)
+                          for m in st.msgs)))
+    return tuple(out)
+
+
 def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
     """A deterministic topological order of the trace's must-precede DAG,
     chosen by step *content* rather than recorded position: among ready
@@ -518,21 +546,31 @@ def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
     content keys are separated by :func:`_structural_ranks` (footprint +
     table-shape colour refinement over the conflict DAG and slot-sharing
     relation — order-invariant, so both reorderings break the tie the
-    same way); steps still tied after refinement are symmetric — either
-    choice yields the same signature — and fall back to recorded
-    position."""
+    same way).  Refinement is incomplete (it is 1-WL): steps can share a
+    colour class without any automorphism mapping one to the other, and
+    there the recorded-index fallback would split one program into two
+    cache entries.  Such residual ties are resolved by *canonical-form
+    comparison*: each tied candidate's completion is computed and the
+    one whose finished :func:`_order_sig` is smallest wins — a choice
+    that depends only on content, never on recorded position.  Truly
+    symmetric candidates produce equal signatures, so either completion
+    is the same signature and the pick is free.  The branching is
+    bounded by :data:`TIE_BRANCH_BUDGET`; past it the recorded-index
+    fallback applies (benign only for automorphic ties)."""
     n = len(steps)
     if n <= 1:
         return list(range(n))
     preds = _conflict_dag([st.msgs for st in steps])
-    npreds = [len(pr) for pr in preds]
     succs: List[List[int]] = [[] for _ in range(n)]
     for j, pr in enumerate(preds):
         for i in pr:
             succs[i].append(j)
-    canon: Dict[int, int] = {}
+    sids = [{m.src_slot.sid for m in st.msgs}
+            | {m.dst_slot.sid for m in st.msgs} for st in steps]
+    ranks_box: List[Optional[List[int]]] = [None]  # lazy: ties are rare
+    budget = [TIE_BRANCH_BUDGET]
 
-    def step_key(st: ProgramStep) -> Tuple:
+    def step_key(st: ProgramStep, canon: Dict[int, int]) -> Tuple:
         local: Dict[int, int] = {}
 
         def ref(slot: Slot) -> Tuple:
@@ -547,26 +585,13 @@ def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
                        ref(m.dst_slot), m.dst_off, m.size, m.origin)
                       for m in st.msgs))
 
-    sids = [{m.src_slot.sid for m in st.msgs}
-            | {m.dst_slot.sid for m in st.msgs} for st in steps]
-    keys: Dict[int, Tuple] = {}
-    ranks: Optional[List[int]] = None   # lazy: ties are the rare case
-    ready = [i for i in range(n) if npreds[i] == 0]
-    order: List[int] = []
-    while ready:
-        for i in ready:
-            if i not in keys:
-                keys[i] = step_key(steps[i])
-        best = min(ready, key=lambda i: (keys[i], i))
-        tied = [i for i in ready if keys[i] == keys[best]]
-        if len(tied) > 1:
-            if ranks is None:
-                ranks = _structural_ranks(steps, preds)
-            best = min(tied, key=lambda i: (ranks[i], i))
-        ready.remove(best)
-        order.append(best)
+    def place(i: int, canon: Dict[int, int], npreds: List[int],
+              ready: List[int], keys: Dict[int, Tuple],
+              order: List[int]) -> None:
+        ready.remove(i)
+        order.append(i)
         newly: set = set()
-        for m in steps[best].msgs:
+        for m in steps[i].msgs:
             for slot in (m.src_slot, m.dst_slot):
                 if slot.sid not in canon:
                     canon[slot.sid] = len(canon)
@@ -574,14 +599,49 @@ def canonical_order(steps: Sequence[ProgramStep]) -> List[int]:
         if newly:
             # a slot just gained its canonical index: keys that referred
             # to it by descriptor must be recomputed
-            for i in ready:
-                if sids[i] & newly:
-                    keys.pop(i, None)
-        for j in succs[best]:
+            for k in ready:
+                if sids[k] & newly:
+                    keys.pop(k, None)
+        for j in succs[i]:
             npreds[j] -= 1
             if npreds[j] == 0:
                 ready.append(j)
-    return order
+
+    def complete(canon: Dict[int, int], npreds: List[int],
+                 ready: List[int], order: List[int]) -> List[int]:
+        keys: Dict[int, Tuple] = {}
+        while ready:
+            for i in ready:
+                if i not in keys:
+                    keys[i] = step_key(steps[i], canon)
+            best = min(ready, key=lambda i: (keys[i], i))
+            tied = [i for i in ready if keys[i] == keys[best]]
+            if len(tied) > 1:
+                if ranks_box[0] is None:
+                    ranks_box[0] = _structural_ranks(steps, preds)
+                ranks = ranks_box[0]
+                rbest = min(ranks[i] for i in tied)
+                tied = [i for i in tied if ranks[i] == rbest]
+                best = min(tied)
+                if len(tied) > 1 and budget[0] >= len(tied):
+                    # canonical-form comparison: finish the order once
+                    # per candidate, keep the smallest finished
+                    # signature (content-only, order-invariant)
+                    budget[0] -= len(tied)
+                    cands = []
+                    for i in tied:
+                        c2, np2 = dict(canon), list(npreds)
+                        r2, o2 = list(ready), list(order)
+                        place(i, c2, np2, r2, {}, o2)
+                        done = complete(c2, np2, r2, o2)
+                        cands.append((_order_sig(steps, done), done))
+                    return min(cands, key=lambda c: c[0])[1]
+            place(best, canon, npreds, ready, keys, order)
+        return order
+
+    npreds0 = [len(pr) for pr in preds]
+    return complete({}, npreds0,
+                    [i for i in range(n) if npreds0[i] == 0], [])
 
 
 def program_signature(steps: Sequence[ProgramStep], p: int,
@@ -1306,9 +1366,19 @@ class ProgramCache:
     :func:`program_signature` — the program-level twin of
     :class:`repro.core.sync.PlanCache`.  A replayed trace skips the
     optimizer *and* the planner (every optimized step carries its plan).
-    """
 
-    def __init__(self, maxsize: int = 256):
+    With a persistent store attached (:meth:`attach_store`, or
+    ``LPFContext(persist_dir=...)`` / ``LPF_PROGRAM_CACHE_DIR``),
+    entries additionally survive the process: certified programs are
+    written back on insert and on eviction, and an in-memory miss
+    consults the disk before paying the schedule search.  A loaded
+    entry is **re-verified** against the actual recorded trace
+    (``verify_program``) before it is served — corruption, version
+    skew, or a stale schedule degrades to a cold miss (counted in
+    ``stats.invalidated``), never an unverified execution."""
+
+    def __init__(self, maxsize: int = 256,
+                 persist_dir: Optional[str] = None):
         self.maxsize = maxsize
         self._programs: "collections.OrderedDict[Hashable, SuperstepProgram]" \
             = collections.OrderedDict()
@@ -1322,15 +1392,61 @@ class ProgramCache:
         #: refuses keys without a passing one
         self._certs: Dict[Hashable, Any] = {}
         self.stats = CacheStats()
+        self._store = None
+        #: keys known to be on disk already (avoids rewriting an entry
+        #: on every certify/evict of the same program)
+        self._persisted: set = set()
+        if persist_dir:
+            self.attach_store(persist_dir)
 
     def __len__(self) -> int:
         return len(self._programs)
 
+    @property
+    def store(self):
+        """The attached :class:`repro.core.persist.PersistentStore`,
+        or ``None`` when the cache is memory-only."""
+        return self._store
+
+    def attach_store(self, directory: str):
+        """Attach (or switch) the persistent store.  The directory is
+        indexed immediately — the warm-load; entries deserialize and
+        re-verify lazily, each on the first trace that maps to its
+        signature (verification needs the recorded steps)."""
+        from .persist import PersistentStore
+        if self._store is not None and \
+                self._store.directory == str(directory):
+            return self._store
+        self._store = PersistentStore(directory)
+        self._persisted = set()
+        return self._store
+
     def clear(self) -> None:
+        """Drop the in-memory state (programs, artifacts, certificates,
+        counters).  On-disk entries are untouched — a cleared cache
+        warm-starts from its store, which is the point of having one."""
         self._programs.clear()
         self._compiled.clear()
         self._certs.clear()
+        self._persisted = set()
         self.stats = CacheStats()
+
+    def _maybe_persist(self, key: Hashable) -> None:
+        """Write-back one entry if it is certified and not yet on disk.
+        Persistence is strictly best-effort: an I/O or encoding failure
+        costs the warm start, never the execution."""
+        if self._store is None or key in self._persisted:
+            return
+        prog = self._programs.get(key)
+        cert = self._certs.get(key)
+        if prog is None or cert is None or not cert.ok:
+            return
+        from .persist import PersistError
+        try:
+            self._store.save(key, prog, cert)
+            self._persisted.add(key)
+        except (PersistError, OSError):
+            pass
 
     def compiled(self, key: Hashable,
                  axes: Sequence[str]) -> Optional["CompiledProgram"]:
@@ -1377,6 +1493,9 @@ class ProgramCache:
         cert = verify_program(steps, prog, scratch=scratch, order=order)
         self._certs[key] = cert
         object.__setattr__(prog, "_certificate", cert)
+        # write-back on insert: certification is the earliest point an
+        # entry is both optimized and proven, so it is the persist point
+        self._maybe_persist(key)
         return cert
 
     def certificate(self, key: Hashable):
@@ -1414,16 +1533,73 @@ class ProgramCache:
             self.stats.hits += 1
             self._programs.move_to_end(key)
             return prog, key
+        prog = self._load_persisted(key, steps, scratch, order)
+        if prog is not None:
+            return prog, key
         prog = optimize_program(steps, p, machine, plan_cache, scratch,
                                 order=order)
         self.stats.misses += 1
+        self._insert(key, prog)
+        return prog, key
+
+    def _load_persisted(self, key: Hashable,
+                        steps: Sequence[ProgramStep],
+                        scratch: Optional[Slot],
+                        order: Sequence[int]
+                        ) -> Optional[SuperstepProgram]:
+        """The warm-start path: on an in-memory miss, try the attached
+        store.  A loaded program is re-certified via ``verify_program``
+        against the ACTUAL recorded trace before it is served — the
+        persisted certificate is a record of what some process once
+        proved, never a substitute for proving it here.  Any failure
+        (integrity, version skew, key mismatch, failed re-verification)
+        invalidates the entry and falls through to a cold build."""
+        if self._store is None:
+            return None
+        status, entry = self._store.load(key)
+        if status == "miss":
+            self.stats.disk_misses += 1
+            return None
+        if status == "invalid":
+            self.stats.invalidated += 1
+            self._store.invalidate(key)
+            return None
+        prog, _stored_cert = entry
+        from ..analysis.verifier import verify_program
+        try:
+            cert = verify_program(steps, prog, scratch=scratch,
+                                  order=order)
+        except Exception:
+            cert = None
+        if cert is None or not cert.ok:
+            self.stats.invalidated += 1
+            self._store.invalidate(key)
+            return None
+        self.stats.disk_hits += 1
+        self._insert(key, prog)
+        self._certs[key] = cert
+        object.__setattr__(prog, "_certificate", cert)
+        self._persisted.add(key)
+        return prog
+
+    def _insert(self, key: Hashable, prog: SuperstepProgram) -> None:
         self._programs[key] = prog
         if len(self._programs) > self.maxsize:
-            evicted, _ = self._programs.popitem(last=False)
+            evicted, eprog = self._programs.popitem(last=False)
+            cert = self._certs.pop(evicted, None)
             self._compiled.pop(evicted, None)
-            self._certs.pop(evicted, None)
             self.stats.evictions += 1
-        return prog, key
+            # write-back on evict: an entry leaving memory keeps its
+            # disk copy (or gains one) so the next process — or the
+            # next cold lookup here — warm-starts instead of re-searching
+            if self._store is not None and evicted not in self._persisted \
+                    and cert is not None and cert.ok:
+                from .persist import PersistError
+                try:
+                    self._store.save(evicted, eprog, cert)
+                    self._persisted.add(evicted)
+                except (PersistError, OSError):
+                    pass
 
 
 _GLOBAL_PROGRAM_CACHE = ProgramCache()

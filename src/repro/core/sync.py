@@ -780,6 +780,15 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    #: warm starts served from a persistent store (entry loaded from
+    #: disk, re-verified, promoted to memory — no re-plan, no re-search)
+    disk_hits: int = 0
+    #: in-memory misses that also found no usable entry on disk (only
+    #: counted while a persistent store is attached)
+    disk_misses: int = 0
+    #: on-disk entries rejected — corruption, version skew, signature
+    #: mismatch, or failed re-verification — each degraded to a cold miss
+    invalidated: int = 0
 
     @property
     def plans(self) -> int:
@@ -791,6 +800,7 @@ class CacheStats:
         benchmarks and replay tests measure hit/miss deltas without a
         process restart or a cold cache."""
         self.hits = self.misses = self.evictions = 0
+        self.disk_hits = self.disk_misses = self.invalidated = 0
 
 
 class PlanCache:

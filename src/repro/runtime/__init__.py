@@ -1,5 +1,5 @@
 """Runtime: step builders, training loop, straggler monitor."""
-from .monitor import StepVerdict, StragglerMonitor
+from .monitor import StepVerdict, StragglerMonitor, cache_metrics
 from .train_step import ServeStep, TrainStep, build_serve_step, build_train_step
-__all__ = ["StepVerdict", "StragglerMonitor", "ServeStep", "TrainStep",
-           "build_serve_step", "build_train_step"]
+__all__ = ["StepVerdict", "StragglerMonitor", "cache_metrics",
+           "ServeStep", "TrainStep", "build_serve_step", "build_train_step"]

@@ -17,9 +17,27 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import Dict, List, Optional
 
-__all__ = ["StragglerMonitor", "StepVerdict"]
+__all__ = ["StragglerMonitor", "StepVerdict", "cache_metrics"]
+
+
+def cache_metrics(ctx) -> Dict[str, int]:
+    """Flatten a context's memo-layer counters into one metrics dict.
+
+    Keys are ``<layer>_<counter>`` (``plan_hits``, ``program_misses``,
+    ``program_disk_hits``, ...) so the result can go straight into a
+    scalar metric pipeline next to the straggler verdicts.  The program
+    layer's disk counters are the persistent-cache health signal:
+    ``program_disk_hits`` > 0 with ``program_misses`` == 0 is a clean
+    warm start; a growing ``program_invalidated`` means the cache
+    directory is stale or corrupt and is being re-built.
+    """
+    out: Dict[str, int] = {}
+    for layer, stats in sorted(ctx.cache_stats.items()):
+        for f in dataclasses.fields(stats):
+            out[f"{layer}_{f.name}"] = getattr(stats, f.name)
+    return out
 
 
 @dataclasses.dataclass

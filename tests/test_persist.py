@@ -1,0 +1,288 @@
+"""Persistent program cache: round trip, re-verification, corruption
+paths, eviction write-back, env wiring, and the cross-process warm
+start (zero re-plans / zero searches / ledger bit-for-bit)."""
+
+import dataclasses
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis.verifier import VerifierReport
+from repro.core import (CacheStats, LPF_SYNC_DEFAULT, LPFContext,
+                        LPFMachine, Msg, PersistError, PersistentStore,
+                        ProgramCache, ProgramStep, Slot,
+                        steps_from_signature)
+from repro.core.persist import FORMAT_VERSION, entry_filename
+from repro.runtime.monitor import cache_metrics
+
+P = 4
+MACHINE = LPFMachine(p=P, g=1e-9, l=1e-6, r=1e-10)
+
+
+def make_slot(sid, size=16):
+    return Slot(sid=sid, name=f"s{sid}", size=size,
+                dtype=np.dtype("float32"), kind="global",
+                orig_shape=(size,))
+
+
+def shift_trace(n_steps=3, base_sid=0):
+    """n_steps independent shifts through distinct slot pairs — each a
+    distinct content key, so the program has a unique canonical form."""
+    steps = []
+    for k in range(n_steps):
+        a = make_slot(base_sid + 2 * k)
+        b = make_slot(base_sid + 2 * k + 1)
+        msgs = tuple(Msg(s, (s + k + 1) % P, a, 0, b, 0, 4 * (k + 1),
+                         origin="put") for s in range(P))
+        steps.append(ProgramStep(msgs, LPF_SYNC_DEFAULT, f"s{k}"))
+    return steps
+
+
+def build_and_certify(cache, steps=None):
+    steps = steps if steps is not None else shift_trace()
+    prog, key = cache.get_or_build_keyed(steps, P, MACHINE)
+    cert = cache.certify(key, steps, prog)
+    assert cert.ok
+    return prog, key, steps
+
+
+# ---------------------------------------------------------------------------
+# round trip + warm start (in-process)
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_and_warm_hit(tmp_path):
+    cold = ProgramCache(persist_dir=str(tmp_path))
+    prog, key, steps = build_and_certify(cold)
+    assert cold.stats.misses == 1 and cold.stats.disk_misses == 1
+    assert os.path.exists(tmp_path / entry_filename(key))
+
+    warm = ProgramCache(persist_dir=str(tmp_path))
+    prog2, key2 = warm.get_or_build_keyed(steps, P, MACHINE)
+    assert key2 == key
+    # a warm start is NOT a schedule search: the disk hit replaces the
+    # optimize_program run entirely
+    assert warm.stats.misses == 0
+    assert warm.stats.disk_hits == 1 and warm.stats.invalidated == 0
+    # the loaded entry arrives pre-certified (re-verified at load)
+    cert2 = warm.certify(key2, steps, prog2)
+    assert cert2.ok
+    # identical IR, field for field
+    assert dataclasses.asdict(prog2) == dataclasses.asdict(prog)
+
+
+def test_store_survives_clear(tmp_path):
+    cache = ProgramCache(persist_dir=str(tmp_path))
+    _, key, steps = build_and_certify(cache)
+    cache.clear()
+    assert len(cache) == 0
+    prog, _ = cache.get_or_build_keyed(steps, P, MACHINE)
+    assert cache.stats.misses == 0 and cache.stats.disk_hits == 1
+
+
+def test_reconstructed_trace_matches_signature(tmp_path):
+    """steps_from_signature is signature-exact — the offline audit
+    verifies the same canonical program the recorder persisted."""
+    from repro.core import program_signature
+
+    steps = shift_trace()
+    sig = program_signature(steps, P)
+    p2, steps2, scratch2 = steps_from_signature(sig)
+    assert p2 == P and scratch2 is None
+    assert program_signature(steps2, p2) == sig
+
+
+# ---------------------------------------------------------------------------
+# corruption / skew: every path degrades to a cold miss, never an error
+# ---------------------------------------------------------------------------
+
+def _tamper_truncate(path):
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[:len(blob) - 7])
+
+
+def _tamper_bitflip(path):
+    blob = bytearray(open(path, "rb").read())
+    blob[-3] ^= 0x40
+    open(path, "wb").write(bytes(blob))
+
+
+def _tamper_header(field, value):
+    def tamper(path):
+        blob = open(path, "rb").read()
+        nl = blob.find(b"\n")
+        header = json.loads(blob[:nl])
+        header[field] = value
+        open(path, "wb").write(
+            json.dumps(header).encode() + blob[nl:])
+    return tamper
+
+
+def _tamper_garbage(path):
+    open(path, "wb").write(b"not a cache entry at all")
+
+
+@pytest.mark.parametrize("tamper", [
+    _tamper_truncate,
+    _tamper_bitflip,
+    _tamper_header("format", FORMAT_VERSION + 1),
+    _tamper_header("jax", "0.0.0"),
+    _tamper_header("magic", "pickle"),
+    _tamper_garbage,
+], ids=["truncated", "bitflip", "format-skew", "jax-skew", "bad-magic",
+        "garbage"])
+def test_corrupt_entry_degrades_to_cold_miss(tmp_path, tamper):
+    rec = ProgramCache(persist_dir=str(tmp_path))
+    prog, key, steps = build_and_certify(rec)
+    path = str(tmp_path / entry_filename(key))
+    tamper(path)
+
+    cache = ProgramCache(persist_dir=str(tmp_path))
+    prog2, key2 = cache.get_or_build_keyed(steps, P, MACHINE)   # no raise
+    assert key2 == key
+    assert cache.stats.invalidated == 1 and cache.stats.disk_hits == 0
+    assert cache.stats.misses == 1          # re-optimized from scratch
+    assert dataclasses.asdict(prog2) == dataclasses.asdict(prog)
+    # the bad entry was dropped, and certification re-persists a good
+    # one: the next fresh process warm-starts again
+    cert = cache.certify(key2, steps, prog2)
+    assert cert.ok
+    fresh = ProgramCache(persist_dir=str(tmp_path))
+    fresh.get_or_build_keyed(steps, P, MACHINE)
+    assert fresh.stats.disk_hits == 1 and fresh.stats.invalidated == 0
+
+
+def test_renamed_entry_rejected_as_key_mismatch(tmp_path):
+    """An entry copied onto another key's filename (hash collision /
+    adversarial rename) must not be served for that key."""
+    rec = ProgramCache(persist_dir=str(tmp_path))
+    _, key_a, _ = build_and_certify(rec, shift_trace(n_steps=2))
+    steps_b = shift_trace(n_steps=3)
+    prog_b, key_b = rec.get_or_build_keyed(steps_b, P, MACHINE)
+    rec.certify(key_b, steps_b, prog_b)
+    shutil.copyfile(tmp_path / entry_filename(key_a),
+                    tmp_path / entry_filename(key_b))
+
+    cache = ProgramCache(persist_dir=str(tmp_path))
+    cache.get_or_build_keyed(steps_b, P, MACHINE)
+    assert cache.stats.invalidated == 1 and cache.stats.disk_hits == 0
+
+
+def test_save_refuses_unverified(tmp_path):
+    store = PersistentStore(str(tmp_path))
+    cache = ProgramCache()
+    steps = shift_trace()
+    prog, key = cache.get_or_build_keyed(steps, P, MACHINE)
+    with pytest.raises(PersistError):
+        store.save(key, prog, None)
+    failed = VerifierReport(ok=False, n_steps=1, n_groups=1, n_rewrites=0)
+    with pytest.raises(PersistError):
+        store.save(key, prog, failed)
+    assert store.filenames() == []
+
+
+# ---------------------------------------------------------------------------
+# write-back on evict
+# ---------------------------------------------------------------------------
+
+def test_eviction_writes_back(tmp_path):
+    cache = ProgramCache(maxsize=2)                  # no store yet
+    prog_a, key_a, steps_a = build_and_certify(cache, shift_trace(2))
+    build_and_certify(cache, shift_trace(3))
+    cache.attach_store(str(tmp_path))                # attached late
+    assert PersistentStore(str(tmp_path)).filenames() == []
+    # inserting a third entry evicts the oldest certified one -> disk
+    cache.get_or_build_keyed(shift_trace(4), P, MACHINE)
+    assert cache.stats.evictions == 1
+    assert os.path.exists(tmp_path / entry_filename(key_a))
+
+    warm = ProgramCache(persist_dir=str(tmp_path))
+    warm.get_or_build_keyed(steps_a, P, MACHINE)
+    assert warm.stats.disk_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# context wiring + metrics export
+# ---------------------------------------------------------------------------
+
+def test_context_env_var_attaches_store(tmp_path, monkeypatch):
+    monkeypatch.setenv("LPF_PROGRAM_CACHE_DIR", str(tmp_path))
+    ctx = LPFContext((), program_cache=ProgramCache())
+    assert ctx.program_cache.store is not None
+    assert ctx.program_cache.store.directory == str(tmp_path)
+    # explicit argument wins over the environment
+    other = tmp_path / "other"
+    ctx2 = LPFContext((), program_cache=ProgramCache(),
+                      persist_dir=str(other))
+    assert ctx2.program_cache.store.directory == str(other)
+    # no env, no arg -> no store
+    monkeypatch.delenv("LPF_PROGRAM_CACHE_DIR")
+    ctx3 = LPFContext((), program_cache=ProgramCache())
+    assert ctx3.program_cache.store is None
+
+
+def test_cache_metrics_exporter(tmp_path):
+    cache = ProgramCache(persist_dir=str(tmp_path))
+    _, _, steps = build_and_certify(cache)
+    warm = ProgramCache(persist_dir=str(tmp_path))
+    warm.get_or_build_keyed(steps, P, MACHINE)
+    ctx = LPFContext((), program_cache=warm)
+    m = cache_metrics(ctx)
+    assert m["program_disk_hits"] == 1
+    assert m["program_misses"] == 0
+    assert {"plan_hits", "plan_misses", "program_hits",
+            "program_invalidated"} <= set(m)
+    assert all(isinstance(v, int) for v in m.values())
+
+
+# ---------------------------------------------------------------------------
+# the analysis CLI over a persisted cache
+# ---------------------------------------------------------------------------
+
+def test_cli_record_audit_and_cost_diff(tmp_path, capsys):
+    from repro.analysis.__main__ import main as cli
+
+    cache_dir = str(tmp_path / "cache")
+    costs = str(tmp_path / "costs.json")
+    assert cli(["--record-cache", cache_dir, "--dump-costs", costs,
+                "pagerank", "fft_redistribute"]) == 0
+    assert cli(["--cache-dir", cache_dir, "--diff-costs", costs]) == 0
+    out = capsys.readouterr().out
+    assert "2 entries, 2 verified, 0 bad" in out
+    with open(costs) as fh:
+        dumped = json.load(fh)
+    assert len(dumped) == 2
+    assert all(c["predicted_us"] > 0 for c in dumped.values())
+
+    # corrupt one entry: the audit must flag it and fail the run
+    victim = sorted(os.listdir(cache_dir))[0]
+    _tamper_bitflip(os.path.join(cache_dir, victim))
+    assert cli(["--cache-dir", cache_dir]) == 1
+    # a missing entry fails the cost diff
+    os.remove(os.path.join(cache_dir, victim))
+    assert cli(["--cache-dir", cache_dir, "--diff-costs", costs]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the whole claim, cross-process
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cross_process_warm_start(tmp_path):
+    """Record in one process, replay in a fresh one: 0 re-plans, 0
+    schedule searches, every program a verified disk hit, and the
+    replayed ledger bit-for-bit identical (asserted by the benchmark's
+    parent process, which this test drives end to end)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(repo, "benchmarks", "warm_start.py"),
+         "--cache-dir", str(tmp_path)],
+        env=env, cwd=repo, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 re-plans, 0 searches" in proc.stdout
+    assert "ledger bit-for-bit" in proc.stdout

@@ -209,6 +209,45 @@ def test_canonical_order_is_reorder_invariant():
     assert program_signature(a, p) == program_signature(b, p)
 
 
+def test_canonical_order_breaks_structural_ties():
+    """Symmetric steps 1-WL colour refinement cannot separate must still
+    share one cache entry (the C6 + 2xC3 counterexample).
+
+    Twelve bit-identical read-only steps whose slot-*sharing* graph is a
+    6-cycle plus two triangles: every step reads two ring slots and
+    writes its own private slot, so there are no precedence edges, every
+    content key is equal, and WL refinement colours all twelve steps
+    identically (2-regular, identical neighbourhoods at every round) —
+    yet a C6 step and a C3 step are NOT interchangeable.  The old
+    tie-break fell back to recorded position, so two recordings of the
+    same program could canonicalize differently and miss each other's
+    ProgramCache entry; the canonical-form comparison must map every
+    shuffle to one signature: exactly 1 miss, then all hits."""
+    p = 4
+    rng = np.random.default_rng(5)
+    ring = [make_slot(i, 8) for i in range(12)]
+
+    def step(i, a, b):
+        w = make_slot(100 + i, 8)
+        return ProgramStep((Msg(0, 1, ring[a], 0, w, 0, 4),
+                            Msg(2, 3, ring[b], 0, w, 4, 4)),
+                           LPF_SYNC_DEFAULT, "t")
+    # C6 over ring[0:6], two C3s over ring[6:9] and ring[9:12]
+    steps = [step(i, i, (i + 1) % 6) for i in range(6)]
+    steps += [step(6 + i, 6 + i, 6 + (i + 1) % 3) for i in range(3)]
+    steps += [step(9 + i, 9 + i, 9 + (i + 1) % 3) for i in range(3)]
+
+    sig = program_signature(steps, p)
+    cache = ProgramCache()
+    cache.get_or_build(steps, p, MACHINE)
+    for _ in range(6):
+        shuffled = [steps[i] for i in rng.permutation(len(steps))]
+        assert program_signature(shuffled, p) == sig
+        cache.get_or_build(shuffled, p, MACHINE)
+    assert cache.stats.misses == 1 and cache.stats.hits == 6
+    assert len(cache) == 1
+
+
 # ---------------------------------------------------------------------------
 # targeted: what the adjacent-only peephole could not find
 # ---------------------------------------------------------------------------

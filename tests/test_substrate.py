@@ -165,6 +165,50 @@ def test_async_checkpointer_and_gc(tmp_path, rng):
     assert steps == [3, 4]
 
 
+def test_checkpoint_sweeps_abandoned_tmp(tmp_path, rng):
+    """A ``.tmp_step_*`` staging dir orphaned by a crash is removed by
+    the next save — it must not accumulate alongside published steps."""
+    stale = tmp_path / ".tmp_step_99"
+    os.makedirs(stale)
+    (stale / "leaf_0.npy").write_bytes(b"partial")
+    save(str(tmp_path), 1, _tree(rng))
+    assert not stale.exists()
+    assert latest_step(str(tmp_path)) == 1
+    # the async path sweeps too (its _gc runs after every save)
+    os.makedirs(stale)
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    ck.save(2, _tree(rng))
+    ck.wait()
+    assert not stale.exists()
+
+
+def test_async_checkpointer_keep_zero_and_one(tmp_path, rng):
+    """keep=0 must retain nothing (the ``steps[:-0]`` empty-slice bug
+    deleted nothing); keep=1 retains exactly the newest step."""
+    ck0 = AsyncCheckpointer(str(tmp_path / "k0"), keep=0)
+    for s in (1, 2, 3):
+        ck0.save(s, _tree(rng))
+    ck0.wait()
+    assert [d for d in os.listdir(tmp_path / "k0")
+            if d.startswith("step_")] == []
+    ck1 = AsyncCheckpointer(str(tmp_path / "k1"), keep=1)
+    for s in (1, 2, 3):
+        ck1.save(s, _tree(rng))
+    ck1.wait()
+    assert [d for d in os.listdir(tmp_path / "k1")
+            if d.startswith("step_")] == ["step_3"]
+    with pytest.raises(ValueError, match="keep must be >= 0"):
+        AsyncCheckpointer(str(tmp_path), keep=-1)
+    # fewer checkpoints than keep: gc must delete nothing (a negative
+    # slice bound would silently drop the OLDEST checkpoints)
+    ck3 = AsyncCheckpointer(str(tmp_path / "k3"), keep=3)
+    for s in (1, 2):
+        ck3.save(s, _tree(rng))
+    ck3.wait()
+    assert sorted(d for d in os.listdir(tmp_path / "k3")
+                  if d.startswith("step_")) == ["step_1", "step_2"]
+
+
 def test_checkpoint_elastic_resharding(tmp_path, rng, mesh8):
     """Save from an 8-device mesh, restore onto a different layout."""
     from jax.sharding import NamedSharding, PartitionSpec as P
