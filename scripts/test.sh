@@ -4,6 +4,8 @@
 #   scripts/test.sh fast      pure planner/unit tests, seconds, no XLA compile
 #   scripts/test.sh slow      XLA-compiling SPMD tests only
 #   scripts/test.sh sanitize  full suite under LPF_SANITIZE=1 (repro.analysis)
+#   scripts/test.sh smoke     fault-injection smoke: one fixed plan per seam
+#   scripts/test.sh chaos     seeded chaos soak (CHAOS_SEEDS plans, default 100)
 #   scripts/test.sh tier1     the canonical verification command (full suite)
 #   scripts/test.sh           == tier1
 set -euo pipefail
@@ -15,6 +17,17 @@ case "${1:-tier1}" in
   fast)  exec python -m pytest -q -m fast ;;
   slow)  exec python -m pytest -q -m slow ;;
   sanitize) LPF_SANITIZE=1 exec python -m pytest -q ;;
+  # the chaos workloads run the real mesh path on 8 host devices; the
+  # flag must be set before the interpreter starts (jax reads it at
+  # first import)
+  smoke)
+    XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}" \
+      exec python -m repro.runtime.faults --smoke ;;
+  chaos)
+    XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}" \
+      exec python -m repro.runtime.faults --chaos \
+        --seeds "${CHAOS_SEEDS:-100}" --seed0 "${CHAOS_SEED0:-0}" ;;
   tier1) exec python -m pytest -x -q ;;
-  *)     echo "usage: scripts/test.sh [fast|slow|sanitize|tier1]" >&2; exit 2 ;;
+  *)     echo "usage: scripts/test.sh [fast|slow|sanitize|smoke|chaos|tier1]" >&2
+         exit 2 ;;
 esac

@@ -151,6 +151,19 @@ class AsyncCheckpointer:
             err, self._error = self._error, None
             raise err
 
+    def restore_latest(self, like: Any, shardings: Any = None):
+        """Restore the newest *published* checkpoint: returns
+        ``(step, tree)``, or ``(None, None)`` when the directory holds
+        no published step.  Waits for any in-flight save first, so the
+        recovery path (``train_loop``'s step supervisor) never races
+        its own publisher."""
+        self.wait()
+        last = latest_step(self.directory)
+        if last is None:
+            return None, None
+        return last, restore(self.directory, last, like,
+                             shardings=shardings)
+
     def _gc(self):
         _sweep_stale_tmp(self.directory)
         steps = sorted(int(d.split("_")[1])

@@ -22,9 +22,11 @@ from .attrs import CompressSpec, LPF_SYNC_DEFAULT, SyncAttributes
 from .context import LPFContext, exec_, hook, rehook
 from .cost import (CostLedger, FUSED_METHODS, OVERLAP_L_FRACTION,
                    SuperstepCost, overlap_cost, schedule_seconds)
-from .errors import (LPF_ERR_FATAL, LPF_ERR_OUT_OF_MEMORY, LPF_SUCCESS,
-                     LPFAnalysisError, LPFCapacityError, LPFError,
-                     LPFFatalError)
+from .errors import (LPF_ERR_FATAL, LPF_ERR_OUT_OF_MEMORY,
+                     LPF_ERR_TRANSIENT, LPF_SUCCESS, LPFAnalysisError,
+                     LPFCapacityError, LPFError, LPFFatalError,
+                     LPFTransientError, classify)
+from .faultpoints import InjectedFault
 from .hlo_analysis import (CollectiveStats, RooflineTerms, parse_collectives,
                            roofline_terms)
 from .machine import (CPU_HOST, TPU_V5E, TPU_V5P, HardwareModel, LinkModel,
@@ -53,7 +55,9 @@ __all__ = [
     "canonical_order",
     "begin_plan", "execute_overlapped", "dependency_cone",
     "LPFError", "LPFCapacityError", "LPFFatalError", "LPFAnalysisError",
+    "LPFTransientError", "classify", "InjectedFault",
     "LPF_SUCCESS", "LPF_ERR_OUT_OF_MEMORY", "LPF_ERR_FATAL",
+    "LPF_ERR_TRANSIENT",
     "HardwareModel", "LinkModel", "LPFMachine", "probe",
     "TPU_V5E", "TPU_V5P", "CPU_HOST",
     "Slot", "SlotRegistry", "Msg",

@@ -20,6 +20,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import os
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -29,9 +30,11 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from . import compat
+from . import faultpoints as _fp
 from .attrs import LPF_SYNC_DEFAULT, SyncAttributes
 from .cost import CostLedger, SuperstepCost
-from .errors import LPFAnalysisError, LPFCapacityError, LPFFatalError
+from .errors import (LPFAnalysisError, LPFCapacityError, LPFError,
+                     LPFFatalError)
 from .machine import LPFMachine, HardwareModel, TPU_V5E, probe as _probe
 from .memslot import Slot, SlotRegistry
 from .program import (ProgramCache, ProgramStep, compile_program,
@@ -143,6 +146,21 @@ class LPFContext:
         self.diagnostics: List[Any] = [] if _parent is None \
             else _parent.diagnostics
         self._rec_registered: List[Slot] = []
+        #: per-nesting-level start indices into ``_rec_pending`` — what
+        #: lets :meth:`program` *discard* the supersteps recorded at an
+        #: aborted level instead of flushing (= executing) a partial
+        #: trace when an exception propagates out of the body.  That
+        #: discard is what keeps a capacity error side-effect-free, the
+        #: precondition of the paper's resize-and-retry contract
+        #: (:meth:`with_capacity`).
+        self._rec_marks: List[int] = []
+        # the deterministic fault-injection hook (LPF_FAULT_PLAN=...):
+        # arming is lazy and idempotent — no plan, no injector, and the
+        # seams stay single-pointer-compare no-ops
+        if _parent is None and os.environ.get("LPF_FAULT_PLAN") \
+                and not _fp.armed():
+            from ..runtime.faults import ensure_env_plan
+            ensure_env_plan()
 
     # ------------------------------------------------------------------
     # capacity management: lpf_resize_message_queue / _memory_register
@@ -176,6 +194,42 @@ class LPFContext:
     def resize_memory_register(self, n_slots: int) -> None:
         reserve = 1 if self._scratch is not None else 0
         self.registry.resize(n_slots + reserve)
+
+    def with_capacity(self, fn: Callable[["LPFContext"], Any], *,
+                      max_attempts: int = 3, grow: float = 2.0) -> Any:
+        """Run ``fn(ctx)`` under the paper's *mitigable-error* contract:
+        an :class:`LPFCapacityError` is side-effect-free, so the caller
+        may resize and retry.  This method implements that retry — the
+        staged queue (and any supersteps recorded inside the attempt,
+        via :meth:`program`'s abort path) is rolled back, the exhausted
+        resource (``e.kind``: message queue or memory register) is grown
+        to ``max(e.required, current * grow)``, and ``fn`` runs again,
+        up to ``max_attempts`` times.  The final attempt's capacity
+        error propagates — still mitigable, for a caller with a better
+        resize policy."""
+        if max_attempts < 1:
+            raise LPFFatalError("with_capacity needs max_attempts >= 1")
+        for attempt in range(max_attempts):
+            queue_snap = list(self._queue)
+            pend_snap = len(self._rec_pending)
+            try:
+                return fn(self)
+            except LPFCapacityError as e:
+                if attempt == max_attempts - 1:
+                    raise
+                # the contract says the failed attempt staged nothing;
+                # enforce it — drop anything the attempt left behind
+                self._queue = queue_snap
+                del self._rec_pending[pend_snap:]
+                if e.kind == "register":
+                    cap = self.registry.capacity
+                    self.registry.resize(
+                        max(e.required, int(cap * grow) + 1))
+                else:
+                    cap = self._queue_capacity
+                    self.resize_message_queue(
+                        max(e.required, int(cap * grow) + 1))
+        raise AssertionError("unreachable")  # pragma: no cover
 
     # ------------------------------------------------------------------
     # registration: lpf_register_{global,local}, lpf_deregister
@@ -214,11 +268,18 @@ class LPFContext:
 
     def _stage(self, msgs: List[Msg]) -> None:
         self._require_active()
+        # fault seam: an armed plan may simulate capacity exhaustion
+        # here — same mitigable LPFCapacityError, same resize-and-retry
+        # contract (:meth:`with_capacity`) as the real check below
+        _fp.fire("capacity", staged=len(self._queue), new=len(msgs),
+                 capacity=self._queue_capacity)
         if len(self._queue) + len(msgs) > self._queue_capacity:
             raise LPFCapacityError(
                 f"message queue capacity {self._queue_capacity} exceeded "
                 f"({len(self._queue)} staged + {len(msgs)} new); call "
-                f"resize_message_queue first")
+                f"resize_message_queue first",
+                required=len(self._queue) + len(msgs),
+                capacity=self._queue_capacity, kind="queue")
         # extents/dtypes/kinds are checked the moment a transfer is
         # staged — an out-of-bounds put fails at the ``ctx.put`` call
         # site, not at the (possibly much later) sync or flush
@@ -342,6 +403,7 @@ class LPFContext:
         self._require_active()
         self._rec_depth += 1
         self._rec_labels.append(label)
+        self._rec_marks.append(len(self._rec_pending))
 
     def end_record(self) -> None:
         """Leave one level of recording; the outermost level flushes any
@@ -350,6 +412,7 @@ class LPFContext:
             raise LPFFatalError("end_record without a matching record()")
         self._rec_depth -= 1
         self._rec_labels.pop()
+        self._rec_marks.pop()
         if self._rec_depth == 0:
             self._flush_program()
             if self.sanitize and self._rec_registered:
@@ -363,16 +426,42 @@ class LPFContext:
                             f"end_record (leak?)"))
             self._rec_registered = []
 
+    def abort_record(self) -> None:
+        """Abandon one level of recording: the supersteps recorded at
+        this level are *discarded*, not executed.  This is the
+        exception path of :meth:`program` — flushing a partial trace
+        when the body raised would issue communication the caller never
+        completed, breaking the mitigable-error contract (a capacity
+        error must be side-effect-free so :meth:`with_capacity` can
+        resize and retry)."""
+        if self._rec_depth == 0:
+            raise LPFFatalError("abort_record without a matching record()")
+        self._rec_depth -= 1
+        self._rec_labels.pop()
+        mark = self._rec_marks.pop()
+        # steps recorded before the mark may have flushed already (a
+        # dependency-cone read shrinks _rec_pending and rebases marks),
+        # so the mark never exceeds the pending length
+        del self._rec_pending[mark:]
+        self._queue = []
+        if self._rec_depth == 0:
+            self._rec_registered = []
+
     @contextlib.contextmanager
     def program(self, label: str = ""):
         """``with ctx.program(): ...`` — record the body's supersteps as
         one :class:`repro.core.SuperstepProgram`; re-entrant (a recorded
         collective inside a recorded training step extends the outer
-        trace)."""
+        trace).  If the body raises, the supersteps it recorded are
+        discarded (:meth:`abort_record`) — never executed as a partial
+        trace — and the exception propagates."""
         self.record(label)
         try:
             yield self
-        finally:
+        except BaseException:
+            self.abort_record()
+            raise
+        else:
             self.end_record()
 
     def _machine(self) -> LPFMachine:
@@ -431,13 +520,37 @@ class LPFContext:
                 + "\n  ".join(str(d) for d in cert.diagnostics))
         if self.sanitize:
             self._sanitize_lint(steps, prog, order)
+        # fault seam: an armed plan may delay this flush (a straggler);
+        # pure wall-clock — numerics and ledger are untouched, which is
+        # exactly what the StragglerMonitor is built to notice
+        d = _fp.delay("straggler")
+        if d > 0:
+            time.sleep(d)
         labels = [st.label for st in steps]
-        if self.compile_programs:
+        cp = None
+        if self.compile_programs and \
+                not self.program_cache.compile_quarantined(key, self.axes):
             cp = self.program_cache.compiled(key, self.axes)
             if cp is None:
-                cp = compile_program(prog, steps, order, self.p,
-                                     self.axes, scratch=self._scratch)
-                self.program_cache.set_compiled(key, self.axes, cp)
+                # graceful degradation: a *foreign* compilation failure
+                # (XLA, OOM, injected) falls back to the dispatched
+                # execute_schedule path below — the SAME certified
+                # program, so numerics and ledger are bit-for-bit
+                # identical — and quarantines this (key, axes) so
+                # replays skip the doomed compile.  LPF errors are
+                # contract violations, never degraded around.
+                try:
+                    cp = compile_program(prog, steps, order, self.p,
+                                         self.axes,
+                                         scratch=self._scratch)
+                except LPFError:
+                    raise
+                except Exception as e:
+                    self.program_cache.quarantine_compile(
+                        key, self.axes, e)
+                else:
+                    self.program_cache.set_compiled(key, self.axes, cp)
+        if cp is not None:
             slots = trace_slot_map(steps, order)
             vals = [self.registry.value(s) for s in slots]
             scratch_val = self.registry.value(self._scratch) \
@@ -485,6 +598,7 @@ class LPFContext:
         if not self._rec_pending:
             return
         steps, self._rec_pending = self._rec_pending, []
+        self._rec_marks = [0] * len(self._rec_marks)
         self._execute_steps(steps)
         self._drain_deferred_dereg()
 
@@ -508,6 +622,10 @@ class LPFContext:
                  if i in cone_set]
         self._rec_pending = [st for i, st in enumerate(self._rec_pending)
                              if i not in cone_set]
+        # rebase the per-level abort marks: indices below a mark that
+        # just flushed no longer occupy pending positions
+        self._rec_marks = [m - sum(1 for i in cone_set if i < m)
+                           for m in self._rec_marks]
         self._execute_steps(steps)
         self._drain_deferred_dereg()
 

@@ -60,7 +60,9 @@ class SlotRegistry:
     def resize(self, capacity: int) -> None:
         if capacity < len(self._slots):
             raise LPFCapacityError(
-                f"cannot shrink register below {len(self._slots)} active slots")
+                f"cannot shrink register below {len(self._slots)} active slots",
+                required=len(self._slots), capacity=capacity,
+                kind="register")
         self.capacity = capacity
 
     # -- lpf_register_{local,global} -------------------------------------
@@ -68,7 +70,9 @@ class SlotRegistry:
         if len(self._slots) >= self.capacity:
             raise LPFCapacityError(
                 f"memory register full ({self.capacity}); call "
-                f"resize_memory_register first")
+                f"resize_memory_register first",
+                required=len(self._slots) + 1, capacity=self.capacity,
+                kind="register")
         value = jnp.asarray(value)
         orig_shape = value.shape
         if flatten:

@@ -51,6 +51,7 @@ from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import faultpoints as _fp
 from .attrs import CompressSpec, SyncAttributes
 from .cost import SuperstepCost
 from .memslot import Slot
@@ -225,6 +226,7 @@ class PersistentStore:
         if cert is None or not getattr(cert, "ok", False):
             raise PersistError("refusing to persist an unverified or "
                                "failed-verification program")
+        _fp.fire("persist_save", directory=self.directory)
         payload = json.dumps({
             "key": _encode(key),
             "program": _encode(prog),
@@ -240,9 +242,18 @@ class PersistentStore:
         path = self._path(key)
         tmp = os.path.join(self.directory,
                            f".tmp_{os.path.basename(path)}.{os.getpid()}")
-        with open(tmp, "wb") as fh:
-            fh.write(header + b"\n" + payload)
-        os.replace(tmp, path)
+        try:
+            with open(tmp, "wb") as fh:
+                fh.write(header + b"\n" + payload)
+            os.replace(tmp, path)
+        except BaseException:
+            # a failed write (full disk, read-only dir) must not strand
+            # a temp file next to the live entries
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
         return path
 
     # ------------------------------------------------------------------
@@ -252,6 +263,10 @@ class PersistentStore:
         corruption, version skew, or (with ``key``) signature mismatch."""
         with open(path, "rb") as fh:
             blob = fh.read()
+        # fault seam: an armed plan may raise OSError here (I/O error)
+        # or hand back a truncated / bit-flipped blob, which the header
+        # and checksum validation below must catch
+        blob = _fp.corrupt("persist_load", blob)
         nl = blob.find(b"\n")
         if nl < 0:
             raise PersistError("truncated header")
@@ -295,11 +310,22 @@ class PersistentStore:
                                "from the requested key")
         return stored_key, prog, cert
 
+    def filename(self, key: Hashable) -> Optional[str]:
+        """The entry filename ``key`` maps to, or ``None`` for a key
+        that cannot be textualised (and so was never stored)."""
+        try:
+            return entry_filename(key)
+        except PersistError:
+            return None
+
     def load(self, key: Hashable) -> Tuple[str, Optional[Tuple[Any, Any]]]:
         """Classified lookup: ``("hit", (program, certificate))``,
-        ``("miss", None)`` when no entry exists for the key, or
-        ``("invalid", None)`` when one exists but fails any integrity,
-        version, or key check (the caller counts it and cold-builds)."""
+        ``("miss", None)`` when no entry exists for the key,
+        ``("invalid", None)`` when one exists but fails an integrity,
+        version, or key check (the caller invalidates it and
+        cold-builds), or ``("error", None)`` on a *transient* I/O
+        failure — the entry itself may be fine, so the caller must NOT
+        invalidate it; it retries or degrades to a cold miss."""
         try:
             path = self._path(key)
         except PersistError:
@@ -309,15 +335,28 @@ class PersistentStore:
         try:
             _, prog, cert = self._read(path, key=key)
             return "hit", (prog, cert)
-        except (PersistError, OSError):
+        except PersistError:
             return "invalid", None
+        except OSError:
+            return "error", None
 
-    def invalidate(self, key: Hashable) -> None:
-        """Best-effort removal of a bad entry so it is not re-tried."""
+    def invalidate(self, key: Hashable) -> bool:
+        """Best-effort removal of a bad entry so it is not re-tried.
+        Returns True iff the entry is gone afterwards — False (a
+        read-only cache dir, say) tells the caller to poison the entry
+        in memory instead, or it would re-pay decode + re-verify on
+        every miss."""
         try:
-            os.remove(self._path(key))
-        except (PersistError, OSError):
-            pass
+            path = self._path(key)
+        except PersistError:
+            return True
+        try:
+            os.remove(path)
+        except FileNotFoundError:
+            return True
+        except OSError:
+            return not os.path.exists(path)
+        return True
 
     def entries(self):
         """Iterate the whole store for offline analysis: yields

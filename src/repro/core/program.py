@@ -93,11 +93,13 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import (Any, Callable, Dict, Hashable, List, Optional, Sequence,
                     Tuple)
 
 import numpy as np
 
+from . import faultpoints as _fp
 from .attrs import SyncAttributes
 from .cost import SuperstepCost, overlap_cost, schedule_seconds
 from .errors import LPFAnalysisError, LPFFatalError
@@ -1315,6 +1317,10 @@ def compile_program(prog: SuperstepProgram, steps: Sequence[ProgramStep],
     reusable by every trace that hits the same cache entry."""
     import jax
 
+    # fault seam: an armed plan may stand in for an XLA compilation
+    # failure here; callers degrade to the dispatched schedule
+    _fp.fire("compile", label=getattr(prog, "label", ""))
+
     actual = trace_slot_map(steps, order)
     slots = tuple(Slot(i, f"__prog_slot{i}", s.size, s.dtype, s.kind,
                        (s.size,))
@@ -1377,6 +1383,15 @@ class ProgramCache:
     skew, or a stale schedule degrades to a cold miss (counted in
     ``stats.invalidated``), never an unverified execution."""
 
+    #: bounded-backoff retry budget for one persistent-store operation
+    #: (transient I/O only; corruption is never retried)
+    DISK_RETRIES = 2
+    DISK_BACKOFF = 0.01      # seconds, doubled per retry
+    #: consecutive failed store *operations* after which the cache
+    #: degrades to memory-only mode (detaches the store) — a dead disk
+    #: must not tax every miss with a retry loop
+    DISK_STRIKE_LIMIT = 3
+
     def __init__(self, maxsize: int = 256,
                  persist_dir: Optional[str] = None):
         self.maxsize = maxsize
@@ -1396,6 +1411,19 @@ class ProgramCache:
         #: keys known to be on disk already (avoids rewriting an entry
         #: on every certify/evict of the same program)
         self._persisted: set = set()
+        #: entry filenames that repeatedly fail decode/re-verification
+        #: AND could not be removed (read-only cache dir): poisoned in
+        #: memory so a corrupt-but-undeletable file costs ONE decode +
+        #: verify, not one per miss
+        self._poisoned: set = set()
+        #: (key, axes) pairs whose whole-program compilation failed:
+        #: replays go straight to the dispatched path instead of
+        #: re-paying a doomed XLA compile every flush
+        self._quarantined: Dict[Hashable, set] = {}
+        self._disk_strikes = 0
+        #: why the cache went memory-only, or None while the store is
+        #: attached (or was never attached)
+        self.memory_only_reason: Optional[str] = None
         if persist_dir:
             self.attach_store(persist_dir)
 
@@ -1412,14 +1440,56 @@ class ProgramCache:
         """Attach (or switch) the persistent store.  The directory is
         indexed immediately — the warm-load; entries deserialize and
         re-verify lazily, each on the first trace that maps to its
-        signature (verification needs the recorded steps)."""
+        signature (verification needs the recorded steps).
+
+        Best-effort: an unusable directory (permissions, full disk)
+        leaves the cache memory-only — a broken cache dir must never
+        take down the context that merely mentioned it."""
         from .persist import PersistentStore
         if self._store is not None and \
                 self._store.directory == str(directory):
             return self._store
-        self._store = PersistentStore(directory)
+        try:
+            self._store = PersistentStore(directory)
+        except OSError as e:
+            self.stats.disk_errors += 1
+            self._store = None
+            self.memory_only_reason = f"attach failed: {e}"
+            return None
         self._persisted = set()
+        self._poisoned = set()
+        self._disk_strikes = 0
+        self.memory_only_reason = None
         return self._store
+
+    # -- disk degradation ladder ----------------------------------------
+    def _disk_op(self, fn):
+        """Run one persistent-store operation with bounded-backoff
+        retries.  Returns ``(ok, result)``; after the budget is spent
+        the failure is counted (``stats.disk_errors``) and — past
+        ``DISK_STRIKE_LIMIT`` consecutive failures — the store is
+        detached (memory-only mode).  I/O failures cost the warm
+        start, never the execution."""
+        delay = self.DISK_BACKOFF
+        for attempt in range(self.DISK_RETRIES + 1):
+            try:
+                out = fn()
+            except OSError as e:
+                if attempt == self.DISK_RETRIES:
+                    self.stats.disk_errors += 1
+                    self._disk_strikes += 1
+                    if self._disk_strikes >= self.DISK_STRIKE_LIMIT:
+                        self._store = None
+                        self.memory_only_reason = \
+                            f"{self._disk_strikes} consecutive I/O " \
+                            f"failures, last: {e}"
+                    return False, None
+                time.sleep(delay)
+                delay *= 2
+            else:
+                self._disk_strikes = 0
+                return True, out
+        return False, None     # pragma: no cover - loop always returns
 
     def clear(self) -> None:
         """Drop the in-memory state (programs, artifacts, certificates,
@@ -1429,7 +1499,35 @@ class ProgramCache:
         self._compiled.clear()
         self._certs.clear()
         self._persisted = set()
+        self._poisoned = set()
+        self._quarantined = {}
+        self._disk_strikes = 0
         self.stats = CacheStats()
+
+    def _write_back(self, key: Hashable, prog: "SuperstepProgram",
+                    cert) -> None:
+        """Best-effort persist of one certified entry (shared by
+        certify-time write-back and eviction write-back): retried with
+        bounded backoff on I/O failure, counted in
+        ``stats.disk_errors``, degrading to memory-only mode past the
+        strike limit — a cache must never take down the program it
+        accelerates."""
+        if self._store is None:
+            return
+        from .persist import PersistError
+        store = self._store
+
+        def op():
+            try:
+                return store.save(key, prog, cert)
+            except PersistError:
+                return None      # encoding refusal: final, not retried
+        ok, path = self._disk_op(op)
+        if ok and path is not None:
+            self._persisted.add(key)
+            fname = store.filename(key)
+            # a fresh good entry supersedes any poison on its filename
+            self._poisoned.discard(fname)
 
     def _maybe_persist(self, key: Hashable) -> None:
         """Write-back one entry if it is certified and not yet on disk.
@@ -1441,12 +1539,7 @@ class ProgramCache:
         cert = self._certs.get(key)
         if prog is None or cert is None or not cert.ok:
             return
-        from .persist import PersistError
-        try:
-            self._store.save(key, prog, cert)
-            self._persisted.add(key)
-        except (PersistError, OSError):
-            pass
+        self._write_back(key, prog, cert)
 
     def compiled(self, key: Hashable,
                  axes: Sequence[str]) -> Optional["CompiledProgram"]:
@@ -1553,16 +1646,40 @@ class ProgramCache:
         persisted certificate is a record of what some process once
         proved, never a substitute for proving it here.  Any failure
         (integrity, version skew, key mismatch, failed re-verification)
-        invalidates the entry and falls through to a cold build."""
+        invalidates the entry and falls through to a cold build.
+
+        Degradation: the poison set short-circuits entries that proved
+        invalid but could not be removed (read-only cache dir), so a
+        corrupt-but-undeletable file costs ONE decode+verify, not one
+        per miss; a transient I/O *error* (as opposed to corruption) is
+        retried with backoff and then degrades to a cold miss WITHOUT
+        invalidating — the entry on disk may be perfectly fine."""
         if self._store is None:
             return None
-        status, entry = self._store.load(key)
+        store = self._store
+        fname = store.filename(key)
+        if fname is not None and fname in self._poisoned:
+            self.stats.disk_misses += 1
+            return None
+
+        def op():
+            status_, entry_ = store.load(key)
+            if status_ == "error":
+                # surface the transient classification to _disk_op so
+                # one ladder owns retries, counting, and detachment
+                raise OSError("transient I/O failure reading "
+                              f"persisted entry {fname}")
+            return status_, entry_
+        ok, result = self._disk_op(op)
+        if not ok:
+            self.stats.disk_misses += 1
+            return None
+        status, entry = result
         if status == "miss":
             self.stats.disk_misses += 1
             return None
         if status == "invalid":
-            self.stats.invalidated += 1
-            self._store.invalidate(key)
+            self._drop_invalid(key, fname)
             return None
         prog, _stored_cert = entry
         from ..analysis.verifier import verify_program
@@ -1572,8 +1689,7 @@ class ProgramCache:
         except Exception:
             cert = None
         if cert is None or not cert.ok:
-            self.stats.invalidated += 1
-            self._store.invalidate(key)
+            self._drop_invalid(key, fname)
             return None
         self.stats.disk_hits += 1
         self._insert(key, prog)
@@ -1582,24 +1698,47 @@ class ProgramCache:
         self._persisted.add(key)
         return prog
 
+    def _drop_invalid(self, key: Hashable, fname: Optional[str]) -> None:
+        """An entry proved bad (corruption or failed re-verification):
+        count it, remove it from disk, and — when removal fails (a
+        read-only cache dir) — poison its filename in memory so the
+        decode+verify cost is paid once, not per miss."""
+        self.stats.invalidated += 1
+        if self._store is not None and not self._store.invalidate(key) \
+                and fname is not None:
+            self._poisoned.add(fname)
+
+    # -- compile quarantine ---------------------------------------------
+    def quarantine_compile(self, key: Hashable, axes: Sequence[str],
+                           err: Optional[BaseException] = None) -> None:
+        """Record that whole-program compilation of ``key`` for an axes
+        tuple failed: replays fall back to the dispatched
+        ``execute_schedule`` path (same certified program, identical
+        ledger) instead of re-paying a doomed XLA compile every flush.
+        Counted in ``stats.compile_fallbacks``."""
+        self._quarantined.setdefault(key, set()).add(tuple(axes))
+        self.stats.compile_fallbacks += 1
+
+    def compile_quarantined(self, key: Hashable,
+                            axes: Sequence[str]) -> bool:
+        """Has compilation of ``key`` for this axes tuple been
+        quarantined by a prior failure?"""
+        return tuple(axes) in self._quarantined.get(key, ())
+
     def _insert(self, key: Hashable, prog: SuperstepProgram) -> None:
         self._programs[key] = prog
         if len(self._programs) > self.maxsize:
             evicted, eprog = self._programs.popitem(last=False)
             cert = self._certs.pop(evicted, None)
             self._compiled.pop(evicted, None)
+            self._quarantined.pop(evicted, None)
             self.stats.evictions += 1
             # write-back on evict: an entry leaving memory keeps its
             # disk copy (or gains one) so the next process — or the
             # next cold lookup here — warm-starts instead of re-searching
-            if self._store is not None and evicted not in self._persisted \
-                    and cert is not None and cert.ok:
-                from .persist import PersistError
-                try:
-                    self._store.save(evicted, eprog, cert)
-                    self._persisted.add(evicted)
-                except (PersistError, OSError):
-                    pass
+            if evicted not in self._persisted and cert is not None \
+                    and cert.ok:
+                self._write_back(evicted, eprog, cert)
 
 
 _GLOBAL_PROGRAM_CACHE = ProgramCache()

@@ -789,6 +789,17 @@ class CacheStats:
     #: on-disk entries rejected — corruption, version skew, signature
     #: mismatch, or failed re-verification — each degraded to a cold miss
     invalidated: int = 0
+    #: persistent-store I/O failures (full disk, read-only dir, read
+    #: errors) absorbed by the degradation ladder: each cost a retry
+    #: loop and at worst the warm start, never the execution.  Past
+    #: ``ProgramCache.DISK_STRIKE_LIMIT`` consecutive failures the
+    #: cache detaches its store and runs memory-only.
+    disk_errors: int = 0
+    #: whole-program compilations that failed and fell back to the
+    #: dispatched ``execute_schedule`` path (same certified program,
+    #: ledger bit-for-bit); the failing signature is quarantined so
+    #: replays skip the doomed compile
+    compile_fallbacks: int = 0
 
     @property
     def plans(self) -> int:
@@ -801,6 +812,7 @@ class CacheStats:
         process restart or a cold cache."""
         self.hits = self.misses = self.evictions = 0
         self.disk_hits = self.disk_misses = self.invalidated = 0
+        self.disk_errors = self.compile_fallbacks = 0
 
 
 class PlanCache:

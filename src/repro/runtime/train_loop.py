@@ -8,7 +8,15 @@ Fault-tolerance contract:
     state can be lost;
   * step wall-times feed the BSP straggler monitor; the policy escalates
     flag -> skip-sync (stale steps, bounded) -> elastic rescale (restore
-    onto a smaller mesh — exercised in tests via checkpoint/restore).
+    onto a smaller mesh — exercised in tests via checkpoint/restore);
+  * step exceptions route through the :class:`StepSupervisor`, which
+    applies the LPF error taxonomy (:func:`repro.core.classify`):
+    *transient* failures (I/O, injected faults, timeouts) are retried
+    from the newest published checkpoint with bounded backoff
+    (``max_restarts``); *fatal* and *mitigable* errors propagate — a
+    contract violation must never be silently retried, and a capacity
+    error belongs to ``ctx.with_capacity``'s resize-and-retry, not to
+    checkpoint rollback.
 
 Local SGD (the paper's STALE attribute realised at loop level): the inner
 loop runs `sync_every` steps with the cross-pod sync OFF (two jitted step
@@ -27,11 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.core.errors import classify
 from repro.data import SyntheticStream
-from .monitor import StragglerMonitor
+from .monitor import StragglerMonitor, StepVerdict
 from .train_step import TrainStep
 
-__all__ = ["TrainLoopConfig", "train_loop"]
+__all__ = ["TrainLoopConfig", "Anomaly", "StepSupervisor", "train_loop"]
 
 
 @dataclasses.dataclass
@@ -43,6 +52,67 @@ class TrainLoopConfig:
     resume: bool = True
     # local SGD / stale sync: 0 = every step is synchronous
     sync_every: int = 0
+    # recovery supervision: how many checkpoint-restore retries a run
+    # may spend on *transient* step failures before the error
+    # propagates, and the (doubling) backoff before each retry
+    max_restarts: int = 2
+    restart_backoff: float = 0.05
+
+
+@dataclasses.dataclass
+class Anomaly:
+    """One supervision event, in the order it happened — the run's
+    flight recorder (returned in the ``train_loop`` summary)."""
+
+    step: int
+    kind: str        # "straggler" | "transient" | "restart" | "give_up"
+    action: str      # verdict action, "restore", "propagate", ...
+    detail: str = ""
+
+
+class StepSupervisor:
+    """Per-step recovery policy: classify, escalate, bound.
+
+    Verdicts from the :class:`StragglerMonitor` are recorded as
+    anomalies when they escalate past "ok" (``flag`` warns,
+    ``skip_sync``/``rescale`` are policy surface for the caller).  Step
+    exceptions are classified with the LPF taxonomy: *transient* errors
+    are absorbed up to ``max_restarts`` times — each absorption asks the
+    caller to restore from the newest published checkpoint after a
+    doubling backoff — everything else propagates unchanged.  Retries
+    are bounded per RUN, not per step: a fault that keeps recurring
+    must eventually surface, classified, to the operator."""
+
+    def __init__(self, max_restarts: int = 2, backoff: float = 0.05):
+        self.max_restarts = max_restarts
+        self.backoff = backoff
+        self.restarts = 0
+        self.anomalies: List[Anomaly] = []
+
+    def on_verdict(self, verdict: StepVerdict) -> None:
+        if verdict.action != "ok":
+            self.anomalies.append(Anomaly(
+                step=verdict.step, kind="straggler",
+                action=verdict.action,
+                detail=f"z={verdict.z:.2f} dt={verdict.duration:.4f}s"))
+
+    def on_error(self, step: int, err: BaseException) -> bool:
+        """Decide the fate of a step that raised: ``True`` = absorb and
+        retry from the latest checkpoint (the caller restores), after
+        sleeping the backoff; ``False`` = propagate."""
+        kind = classify(err)
+        if kind != "transient" or self.restarts >= self.max_restarts:
+            self.anomalies.append(Anomaly(
+                step=step, kind=kind, action="propagate",
+                detail=f"{type(err).__name__}: {err}"))
+            return False
+        self.restarts += 1
+        self.anomalies.append(Anomaly(
+            step=step, kind="transient", action="restore",
+            detail=f"restart {self.restarts}/{self.max_restarts}: "
+                   f"{type(err).__name__}: {err}"))
+        time.sleep(self.backoff * (2 ** (self.restarts - 1)))
+        return True
 
 
 def train_loop(ts: TrainStep, stream: SyntheticStream,
@@ -54,13 +124,18 @@ def train_loop(ts: TrainStep, stream: SyntheticStream,
     start = 0
     params = opt = None
     ckpt = AsyncCheckpointer(cfg.ckpt_dir) if cfg.ckpt_dir else None
+    p_shapes = jax.eval_shape(lambda k: ts.init_fn(k), key)
+    # NOT `(ts.param_sharding, ts.opt_sharding)` unconditionally: jax
+    # flattens None as an *empty* subtree, so a (None, None) shardings
+    # pytree would flatten to zero leaves and break restore's zip
+    shards = (None if ts.param_sharding is None and ts.opt_sharding is None
+              else (ts.param_sharding, ts.opt_sharding))
 
     if ckpt and cfg.resume:
         last = latest_step(cfg.ckpt_dir)
         if last is not None:
-            p_shapes = jax.eval_shape(lambda k: ts.init_fn(k), key)
             state = restore(cfg.ckpt_dir, last, p_shapes,
-                            shardings=(ts.param_sharding, ts.opt_sharding))
+                            shardings=shards)
             params, opt = state
             start = last
 
@@ -68,18 +143,39 @@ def train_loop(ts: TrainStep, stream: SyntheticStream,
         params, opt = ts.init_fn(key)
 
     monitor = StragglerMonitor()
+    supervisor = StepSupervisor(max_restarts=cfg.max_restarts,
+                                backoff=cfg.restart_backoff)
     losses: List[float] = []
-    for step in range(start, cfg.steps):
+    step = start
+    while step < cfg.steps:
         batch_np = stream.batch(step)
         batch = jax.tree.map(jnp.asarray, batch_np)
         use_nosync = (cfg.sync_every > 1 and step_fn_nosync is not None
                       and (step + 1) % cfg.sync_every != 0)
         fn = step_fn_nosync if use_nosync else ts.step_fn
         t0 = time.time()
-        params, opt, metrics = fn(params, opt, batch)
-        loss = float(metrics["loss"])
+        try:
+            params, opt, metrics = fn(params, opt, batch)
+            loss = float(metrics["loss"])
+        except Exception as err:
+            if not supervisor.on_error(step, err):
+                raise
+            # transient, absorbed: roll back to the newest published
+            # state and re-run from there.  Without a checkpointer the
+            # live (params, opt) are still pre-step — the step that
+            # raised never committed its update — so retrying in place
+            # is the same rollback with a zero-step window.
+            if ckpt:
+                rstep, state = ckpt.restore_latest(p_shapes,
+                                                   shardings=shards)
+                if rstep is not None:
+                    params, opt = state
+                    del losses[max(0, rstep - start):]
+                    step = rstep
+            continue
         dt = time.time() - t0
         verdict = monitor.record(step, dt)
+        supervisor.on_verdict(verdict)
         losses.append(loss)
         if on_step:
             on_step(step, loss, verdict)
@@ -89,6 +185,7 @@ def train_loop(ts: TrainStep, stream: SyntheticStream,
         if ckpt and (step + 1) % cfg.ckpt_every == 0:
             ckpt.save(step + 1, (params, opt),
                       meta={"loss": loss, "data": stream.state(step + 1)})
+        step += 1
     if ckpt:
         ckpt.save(cfg.steps, (params, opt),
                   meta={"data": stream.state(cfg.steps)})
@@ -97,4 +194,6 @@ def train_loop(ts: TrainStep, stream: SyntheticStream,
         "params": params, "opt": opt, "losses": losses,
         "monitor": monitor.history, "final_loss": losses[-1] if losses
         else float("nan"),
+        "anomalies": supervisor.anomalies,
+        "restarts": supervisor.restarts,
     }

@@ -105,8 +105,11 @@ def _run_trace_on_mesh(mesh8, slots, steps, *, compiled,
                        plan_cache=None, program_cache=None):
     """Issue a canned ProgramStep trace through the real ``ctx.program``
     path; returns ({sid: [p, size] np.ndarray}, ledger records, ctx)."""
-    pc = plan_cache or lpf.PlanCache()
-    pgc = program_cache or lpf.ProgramCache()
+    # NOT `plan_cache or ...`: both caches define __len__, so an EMPTY
+    # cache passed by a test is falsy and would be silently replaced
+    pc = plan_cache if plan_cache is not None else lpf.PlanCache()
+    pgc = program_cache if program_cache is not None \
+        else lpf.ProgramCache()
     box = {}
 
     def wrapped(_):
@@ -318,3 +321,87 @@ def test_compile_loop_argument_validation(mesh8):
                                       out_specs=P(), check_vma=False))
         with pytest.raises(Exception, match="compile_loop|collect"):
             fn(jnp.zeros(1))
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: compiled -> dispatched fallback + quarantine
+# ---------------------------------------------------------------------------
+
+def test_compile_failure_falls_back_to_dispatched(mesh8):
+    """An injected whole-program compilation failure degrades to the
+    dispatched ``execute_schedule`` path: values AND ledger bit-for-bit
+    identical to both the clean compiled run and the oracle, the
+    (key, axes) is quarantined, and ``compile_fallbacks`` counts it."""
+    from repro.runtime import faults
+
+    slots, steps = fft_redistribute_trace()
+    oracle = simulate_program([(s.msgs, s.attrs) for s in steps],
+                              _init_np(slots, P_MESH))
+    clean_vals, clean_led, _ = _run_trace_on_mesh(
+        mesh8, slots, steps, compiled=True)
+
+    pgc = lpf.ProgramCache()
+    with faults.inject(faults.FaultPlan.parse("compile@0x-1")) as inj:
+        vals, led, ctx = _run_trace_on_mesh(
+            mesh8, slots, steps, compiled=True, program_cache=pgc)
+    assert inj.fired, "the compile seam never fired"
+    for s in slots:
+        assert (vals[s.sid] == oracle[s.sid]).all()
+        assert (vals[s.sid] == clean_vals[s.sid]).all()
+    assert led == clean_led
+    assert pgc.stats.compile_fallbacks == 1
+    assert len(pgc._compiled) == 0
+    (key,) = pgc._programs.keys()
+    assert pgc.compile_quarantined(key, ("x",))
+
+
+def test_quarantine_skips_compile_on_replay(mesh8):
+    """After a compile failure quarantines the signature, replays go
+    straight to the dispatched path: the compile seam is never
+    consulted again (no repeated doomed compiles), and the fallback
+    counter stays at one."""
+    from repro.runtime import faults
+
+    slots, steps = fft_redistribute_trace()
+    pc, pgc = lpf.PlanCache(), lpf.ProgramCache()
+    with faults.inject(faults.FaultPlan.parse("compile@0x-1")) as inj:
+        vals1, led1, _ = _run_trace_on_mesh(
+            mesh8, slots, steps, compiled=True,
+            plan_cache=pc, program_cache=pgc)
+        fired_after_first = len(inj.fired)
+        vals2, led2, _ = _run_trace_on_mesh(
+            mesh8, slots, steps, compiled=True,
+            plan_cache=pc, program_cache=pgc)
+    assert fired_after_first == 1
+    # the replay hit the quarantine before compile_program ran: the
+    # forever-armed compile event had no second invocation to fire on
+    assert len(inj.fired) == 1
+    assert inj.counts["compile"] == 1
+    assert pgc.stats.compile_fallbacks == 1
+    for s in slots:
+        assert (vals1[s.sid] == vals2[s.sid]).all()
+    assert led1 == led2
+
+
+def test_lpf_errors_never_degraded_around(mesh8):
+    """The ladder only degrades around *foreign* failures: an LPF error
+    raised during compilation (here: a capacity error injected at the
+    compile seam's position via a monkeypatched compile_program) must
+    propagate, not fall back."""
+    import repro.core.context as context_mod
+
+    slots, steps = fft_redistribute_trace()
+    pgc = lpf.ProgramCache()
+    orig = context_mod.compile_program
+
+    def boom(*a, **k):
+        raise lpf.LPFFatalError("contract violation during lowering")
+
+    context_mod.compile_program = boom
+    try:
+        with pytest.raises(Exception, match="contract violation"):
+            _run_trace_on_mesh(mesh8, slots, steps, compiled=True,
+                               program_cache=pgc)
+    finally:
+        context_mod.compile_program = orig
+    assert pgc.stats.compile_fallbacks == 0
