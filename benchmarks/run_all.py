@@ -30,7 +30,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 def _jobs(fast: bool):
     from . import (allreduce, fft, hrelation, messages, pagerank,
-                   program_replay, roofline, schedule_search, warm_start)
+                   program_replay, roofline, schedule_search,
+                   serve_latency, warm_start)
     return {
         "scheduler": lambda: schedule_search.main(),
         "hrelation": lambda: hrelation.main(),
@@ -45,6 +46,8 @@ def _jobs(fast: bool):
         "overlap": lambda: program_replay.main(compiled=False),
         "compiled_replay": lambda: program_replay.compiled_replay_main(),
         "warm_start": lambda: warm_start.main(),
+        "serve": lambda: serve_latency.main(
+            n_requests=40 if fast else 120),
     }
 
 

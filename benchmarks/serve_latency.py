@@ -1,0 +1,114 @@
+"""Serve-loop latency under the model-priced admission controller.
+
+A burst-arrival synthetic workload runs through
+:class:`repro.runtime.server.LPFServer` over the pure-LPF
+:class:`~repro.runtime.server.ProgramDecodeEngine`; per completed
+request we record wall latency (submit -> terminal) and model-clock
+latency (admission vclock -> completion vclock), aggregated per decode
+bucket into p50/p99, next to the SLO accounting the admission
+controller promises: zero deadline misses for admitted requests and a
+classified reason for every refusal.
+
+``python -m benchmarks.serve_latency`` prints the CSV;
+``benchmarks.run_all`` captures it as ``BENCH_serve.json`` so the
+nightly workflow tracks serve latency and admission mix across PRs.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def _pctl(xs, q):
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    i = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+def main(n_requests: int = 120, burst: int = 6, seed: int = 0):
+    from repro.runtime.server import (LPFServer, ProgramDecodeEngine,
+                                      synthetic_requests)
+
+    eng = ProgramDecodeEngine(buckets=((2, 16), (4, 16), (4, 32)))
+    srv = LPFServer(eng, max_queue=16)
+    reqs = synthetic_requests(
+        n_requests, seed, eng.buckets(),
+        token_cost_s=max(eng.token_seconds(b) for b in eng.buckets()),
+        deadline_scale=80.0)
+
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), burst):
+        for r in reqs[i:i + burst]:
+            srv.submit(r)
+        srv.step()
+    srv.run_until_idle()
+    health = srv.drain()
+    wall = time.perf_counter() - t0
+
+    outs = srv.take_outcomes()
+    per_bucket: dict = {}
+    for out in outs.values():
+        if out.status == "completed":
+            per_bucket.setdefault(out.bucket, []).append(out)
+
+    rows = []
+    print("bucket,completed,wall_p50_ms,wall_p99_ms,"
+          "model_p50_ms,model_p99_ms,tokens")
+    for bucket in sorted(per_bucket):
+        done = per_bucket[bucket]
+        walls = [o.wall_s * 1e3 for o in done]
+        models = [(o.completion_v - o.admit_v) * 1e3 for o in done]
+        row = {
+            "bucket": f"{bucket[0]}x{bucket[1]}",
+            "completed": len(done),
+            "wall_p50_ms": round(_pctl(walls, 0.50), 3),
+            "wall_p99_ms": round(_pctl(walls, 0.99), 3),
+            "model_p50_ms": round(_pctl(models, 0.50), 6),
+            "model_p99_ms": round(_pctl(models, 0.99), 6),
+            "tokens": sum(len(o.tokens) for o in done),
+        }
+        rows.append(row)
+        print(",".join(str(row[k]) for k in (
+            "bucket", "completed", "wall_p50_ms", "wall_p99_ms",
+            "model_p50_ms", "model_p99_ms", "tokens")))
+
+    slo = {
+        "bucket": "TOTAL",
+        "submitted": health["submitted"],
+        "admitted": health["admitted"],
+        "completed": health["completed"],
+        "shed": health["shed"],
+        "rejected": health["rejected_total"],
+        "deadline_misses": health["deadline_misses"],
+        "decode_fallbacks": health["decode_fallbacks"],
+        "queue_peak": health["queue_peak"],
+        "level_peak": health["level_peak"],
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(health["tokens_decoded"] / wall, 1),
+    }
+    rows.append(slo)
+    print(f"\nadmission: {slo['admitted']}/{slo['submitted']} admitted, "
+          f"{slo['rejected']} rejected, {slo['shed']} shed, "
+          f"{slo['deadline_misses']} deadline misses")
+    print(f"throughput: {health['tokens_decoded']} tokens in "
+          f"{wall:.3f}s ({slo['tok_per_s']} tok/s), "
+          f"queue peak {slo['queue_peak']}, "
+          f"ladder peak level {slo['level_peak']}")
+    if slo["deadline_misses"]:
+        raise SystemExit("SLO violation: admitted request(s) missed "
+                         "their model-clock deadline")
+    mean_wall = statistics.fmean(
+        o.wall_s for o in outs.values()
+        if o.status == "completed") if per_bucket else float("nan")
+    print(f"mean completed wall latency: {mean_wall * 1e3:.2f} ms")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

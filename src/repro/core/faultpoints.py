@@ -27,6 +27,15 @@ Seams (see ``runtime/faults.py`` for the plan grammar):
     :meth:`repro.core.context.LPFContext._stage` — injected capacity
     exhaustion (mitigable ``LPFCapacityError``), exercising the
     paper's resize-and-retry contract.
+``serve_admit``
+    :meth:`repro.runtime.server.LPFServer.submit` — injected
+    infrastructure failure during request admission; the server must
+    reject the request with a classified reason, never die.
+``serve_decode``
+    :meth:`repro.runtime.server.LPFServer.step` — injected decode
+    failure before a batch issues; the server retries on the
+    per-token fallback path (bucket quarantined) and, if that also
+    fails, fails the batch's requests with a classified reason.
 """
 
 from __future__ import annotations
@@ -37,7 +46,7 @@ __all__ = ["InjectedFault", "SEAMS", "armed", "fire", "corrupt", "delay"]
 
 #: the closed set of seam names a plan may target
 SEAMS = ("persist_save", "persist_load", "compile", "straggler",
-         "capacity")
+         "capacity", "serve_admit", "serve_decode")
 
 
 class InjectedFault(RuntimeError):

@@ -1420,6 +1420,12 @@ class ProgramCache:
         #: replays go straight to the dispatched path instead of
         #: re-paying a doomed XLA compile every flush
         self._quarantined: Dict[Hashable, set] = {}
+        #: keys exempt from LRU eviction (:meth:`pin`) — the serving
+        #: path pins its hot decode-bucket programs so a burst of cold
+        #: one-shot signatures can never evict the entries every
+        #: admitted request depends on.  ``maxsize`` bounds the
+        #: *unpinned* population; pins are never silently dropped.
+        self._pinned: set = set()
         self._disk_strikes = 0
         #: why the cache went memory-only, or None while the store is
         #: attached (or was never attached)
@@ -1501,6 +1507,7 @@ class ProgramCache:
         self._persisted = set()
         self._poisoned = set()
         self._quarantined = {}
+        self._pinned = set()
         self._disk_strikes = 0
         self.stats = CacheStats()
 
@@ -1708,6 +1715,45 @@ class ProgramCache:
                 and fname is not None:
             self._poisoned.add(fname)
 
+    # -- pinned entries (serving hot set) -------------------------------
+    def pin(self, key: Hashable) -> None:
+        """Exempt ``key`` from LRU eviction.  A pinned entry survives
+        any burst of cold one-shot signatures — the serving loop pins
+        its per-bucket decode programs because every admitted request
+        is priced against them; losing one mid-load would turn a cache
+        hit into a schedule search on the latency path.  Pinning a key
+        with no cached program is a fatal error (there is nothing to
+        protect)."""
+        if key not in self._programs:
+            raise LPFFatalError("pin for a key with no cached program")
+        self._pinned.add(key)
+
+    def unpin(self, key: Hashable) -> None:
+        """Return ``key`` to normal LRU eviction (idempotent)."""
+        self._pinned.discard(key)
+
+    @property
+    def pinned(self) -> frozenset:
+        """The keys currently exempt from eviction."""
+        return frozenset(self._pinned)
+
+    def keys(self) -> Tuple[Hashable, ...]:
+        """The cached program keys, LRU-oldest first."""
+        return tuple(self._programs.keys())
+
+    def flush(self) -> int:
+        """Best-effort write-back of every certified in-memory entry
+        not yet on disk (the graceful-drain hook: a stopping server
+        flushes so the next process warm-starts with the hot decode
+        set).  Returns the number of entries newly persisted.  No-op
+        without an attached store."""
+        if self._store is None:
+            return 0
+        before = len(self._persisted)
+        for key in list(self._programs):
+            self._maybe_persist(key)
+        return len(self._persisted) - before
+
     # -- compile quarantine ---------------------------------------------
     def quarantine_compile(self, key: Hashable, axes: Sequence[str],
                            err: Optional[BaseException] = None) -> None:
@@ -1727,18 +1773,28 @@ class ProgramCache:
 
     def _insert(self, key: Hashable, prog: SuperstepProgram) -> None:
         self._programs[key] = prog
-        if len(self._programs) > self.maxsize:
-            evicted, eprog = self._programs.popitem(last=False)
-            cert = self._certs.pop(evicted, None)
-            self._compiled.pop(evicted, None)
-            self._quarantined.pop(evicted, None)
-            self.stats.evictions += 1
-            # write-back on evict: an entry leaving memory keeps its
-            # disk copy (or gains one) so the next process — or the
-            # next cold lookup here — warm-starts instead of re-searching
-            if evicted not in self._persisted and cert is not None \
-                    and cert.ok:
-                self._write_back(evicted, eprog, cert)
+        # maxsize bounds the UNPINNED population: eviction picks the
+        # least-recently-used unpinned entry, so a serving hot set
+        # survives thousands of cold one-shot signatures streaming
+        # through (the cache may transiently hold maxsize + pinned
+        # entries — pins are a promise, not a hint)
+        if len(self._programs) - len(self._pinned) <= self.maxsize:
+            return
+        evicted = next((k for k in self._programs
+                        if k not in self._pinned), None)
+        if evicted is None:      # pragma: no cover - all-pinned cache
+            return
+        eprog = self._programs.pop(evicted)
+        cert = self._certs.pop(evicted, None)
+        self._compiled.pop(evicted, None)
+        self._quarantined.pop(evicted, None)
+        self.stats.evictions += 1
+        # write-back on evict: an entry leaving memory keeps its
+        # disk copy (or gains one) so the next process — or the
+        # next cold lookup here — warm-starts instead of re-searching
+        if evicted not in self._persisted and cert is not None \
+                and cert.ok:
+            self._write_back(evicted, eprog, cert)
 
 
 _GLOBAL_PROGRAM_CACHE = ProgramCache()

@@ -18,6 +18,10 @@ seam                      injected failure
                           ``compile_program`` (:class:`InjectedFault`)
 ``straggler``             wall-clock delay before a schedule issues
 ``capacity``              mitigable ``LPFCapacityError`` at staging time
+``serve_admit``           :class:`InjectedFault` during request admission
+                          (``LPFServer.submit``)
+``serve_decode``          :class:`InjectedFault` before a decode batch
+                          issues (``LPFServer.step``)
 ========================  ==================================================
 
 No seam fires unless a plan is **armed** (:func:`arm` / :func:`inject`
@@ -36,13 +40,22 @@ Plan grammar (``FaultPlan.parse`` / ``.spec()`` round-trip)::
     arg     := straggler only: delay seconds (default 0.02)
 
 The chaos soak harness (``python -m repro.runtime.faults --chaos
---seeds N``) replays warm-start, bucketed-sync, and decode workloads
-under seeded random plans and asserts the core invariant: every run
-either completes with numerics and ledger **identical** to the
-fault-free run, or raises a **classified** :class:`repro.core.LPFError`
-before any communication is issued — never an unclassified exception,
-never an unverified execution.  ``--smoke`` runs one fixed plan per
-seam (the CI tripwire that keeps the seams from rotting).
+--seeds N``) replays warm-start, bucketed-sync, decode, and serve
+workloads under seeded random plans and asserts the core invariant:
+every run either completes with numerics and ledger **identical** to
+the fault-free run, or raises a **classified**
+:class:`repro.core.LPFError` before any communication is issued —
+never an unclassified exception, never an unverified execution.
+``--smoke`` runs one fixed plan per seam (the CI tripwire that keeps
+the seams from rotting).
+
+The ``serve`` workload's invariant is per *request*, not per run
+(:func:`_serve_compare`): under any fault-plus-overload plan every
+request either completes with tokens bit-identical to its unloaded
+solo decode, or terminates refused with a classified
+:class:`~repro.runtime.server.ServeRejected` — and the server object
+itself must survive the whole arrival sequence (an exception escaping
+the serve loop fails the run even if it is an LPFError).
 """
 
 from __future__ import annotations
@@ -77,6 +90,8 @@ _MODES = {
     "compile": ("",),
     "straggler": ("",),
     "capacity": ("",),
+    "serve_admit": ("",),
+    "serve_decode": ("",),
 }
 
 _EVENT_RE = re.compile(
@@ -219,6 +234,15 @@ class FaultInjector:
                 f"injected fault: message queue capacity exhausted "
                 f"({staged} staged + {new} new > effective capacity)",
                 required=staged + new, capacity=cap, kind="queue")
+        if seam == "serve_admit":
+            raise InjectedFault(
+                f"injected fault: admission infrastructure failure "
+                f"(rid={info.get('rid')})")
+        if seam == "serve_decode":
+            raise InjectedFault(
+                f"injected fault: decode launch failure "
+                f"(bucket={info.get('bucket')}, "
+                f"fallback={bool(info.get('fallback'))})")
         raise AssertionError(f"seam {seam!r} has no fire() action")
 
     def corrupt(self, seam: str, blob: bytes) -> bytes:
@@ -432,12 +456,100 @@ def _wl_decode() -> dict:
     return {"values": {0: out}, "ledger": box["ledger"]}
 
 
+def _wl_serve() -> dict:
+    """The hardened serve loop under fault-plus-overload: a burst
+    arrival pattern into a small bounded queue (driving the ladder
+    through shrink, shed, and backpressure) while the ``serve_admit``
+    and ``serve_decode`` seams (plus the program layer's ``compile`` /
+    ``straggler``) fire.  The result carries every request's terminal
+    state AND the per-request solo-decode reference streams; the
+    invariant is per request (:func:`_serve_compare`), because under
+    faults a *different* admission mix is legitimate — what is never
+    legitimate is a completed request whose tokens differ from its
+    unloaded solo decode, an unclassified refusal, a missed deadline
+    for an admitted request, or a dead server."""
+    from ..runtime.server import (LPFServer, ProgramDecodeEngine,
+                                  synthetic_requests)
+    eng = ProgramDecodeEngine(buckets=((2, 8), (4, 8)))
+    reqs = synthetic_requests(
+        24, seed=7, buckets=eng.buckets(),
+        token_cost_s=eng.token_seconds((4, 8)), deadline_scale=60.0)
+    # the unloaded baseline: every request decoded solo, fault-free as
+    # far as the serve seams go (they fire only inside LPFServer).
+    # Both serve buckets share cache_len, so streams are bucket-
+    # independent and one solo decode per request suffices.
+    ref = {}
+    for r in reqs:
+        t = eng.round_tokens((2, 8), r.n_tokens)
+        ref[r.rid] = eng.decode((2, 8), [r], t)[r.rid][:r.n_tokens]
+    served: Dict[int, tuple] = {}
+    try:
+        srv = LPFServer(eng, max_queue=6)
+        # bursts of 4 submissions per decode step: the queue saturates,
+        # the ladder climbs, and admission keeps being exercised
+        for i in range(0, len(reqs), 4):
+            for r in reqs[i:i + 4]:
+                srv.submit(r)
+            srv.step()
+        srv.drain()
+    except BaseException as e:   # noqa: BLE001 - the invariant under test
+        return {"server_died": f"{type(e).__name__}: {e}", "ref": ref,
+                "served": served, "health": {}}
+    for rid, out in srv.take_outcomes().items():
+        if out.status == "completed":
+            ok_deadline = out.completion_v <= out.predicted_v + 1e-12
+            served[rid] = ("completed", out.tokens, ok_deadline)
+        else:
+            served[rid] = (out.status, out.reason, out.classified)
+    return {"server_died": None, "ref": ref, "served": served,
+            "health": srv.health()}
+
+
+def _serve_compare(res: dict, baseline: dict) -> Tuple[bool, str]:
+    """The serve chaos invariant, request by request (see
+    :func:`_wl_serve`).  ``res`` may legitimately admit a different
+    mix than ``baseline``; only ``baseline['ref']`` (the unloaded
+    solo-decode streams) anchors the numeric comparison."""
+    if res["server_died"]:
+        return False, f"server died: {res['server_died']}"
+    h = res["health"]
+    if h.get("deadline_misses", 0) != 0:
+        return False, f"{h['deadline_misses']} admitted request(s) " \
+                      f"missed their model-clock deadline"
+    ref = baseline["ref"]
+    if set(res["served"]) != set(ref):
+        return False, "request(s) vanished without a terminal outcome"
+    for rid, term in sorted(res["served"].items()):
+        if term[0] == "completed":
+            _, tokens, ok_deadline = term
+            if not ok_deadline:
+                return False, f"rid {rid}: completed past its " \
+                              f"admission-predicted bound"
+            if tuple(tokens) != tuple(ref[rid]):
+                return False, f"rid {rid}: tokens differ from the " \
+                              f"unloaded solo decode"
+        else:
+            status, reason, classified = term
+            if not classified:
+                return False, f"rid {rid}: {status} ({reason}) " \
+                              f"without a classified LPFError"
+    return True, ""
+
+
 #: workload name -> (fn, seams random plans may draw from)
 WORKLOADS = {
     "warm_start": (_wl_warm_start, ("persist_save", "persist_load")),
     "bucketed_sync": (_wl_bucketed_sync,
                       ("compile", "straggler", "capacity")),
     "decode": (_wl_decode, ("compile", "straggler", "capacity")),
+    "serve": (_wl_serve, ("serve_admit", "serve_decode", "compile",
+                          "straggler")),
+}
+
+#: workloads whose pass criterion is not whole-result equality; the
+#: comparator returns ``(ok, why_not)`` against the fault-free baseline
+_COMPARATORS = {
+    "serve": _serve_compare,
 }
 
 #: the CI smoke matrix: one fixed plan per seam (and per persist_load
@@ -453,6 +565,13 @@ SMOKE_PLANS = (
     ("bucketed_sync", "capacity@0"),
     ("decode", "compile@0"),
     ("decode", "capacity@0"),
+    ("serve", "serve_admit@0"),
+    ("serve", "serve_admit@0x-1"),
+    ("serve", "serve_decode@0"),
+    # both the fused attempt and the per-token retry fail: the whole
+    # ladder runs and every affected request must end classified
+    ("serve", "serve_decode@0x-1"),
+    ("serve", "compile@0x-1"),
 )
 
 
@@ -497,7 +616,12 @@ def _run_one(workload: str, plan: Optional[FaultPlan],
         return "classified", f"{type(e).__name__}: {e}"
     except Exception as e:   # noqa: BLE001 - the invariant under test
         return "UNCLASSIFIED", f"{type(e).__name__}: {e}"
-    if not _results_equal(res, baselines[workload]):
+    compare = _COMPARATORS.get(workload)
+    if compare is not None:
+        ok, why = compare(res, baselines[workload])
+        if not ok:
+            return "MISMATCH", why
+    elif not _results_equal(res, baselines[workload]):
         return "MISMATCH", "result differs from fault-free baseline"
     return "identical", f"{len(fired)} fault(s) fired"
 

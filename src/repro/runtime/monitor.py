@@ -15,9 +15,10 @@ feeds ``train_loop``'s recovery path.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Deque, Dict, Optional
 
 __all__ = ["StragglerMonitor", "StepVerdict", "cache_metrics"]
 
@@ -32,11 +33,30 @@ def cache_metrics(ctx) -> Dict[str, int]:
     ``program_disk_hits`` > 0 with ``program_misses`` == 0 is a clean
     warm start; a growing ``program_invalidated`` means the cache
     directory is stale or corrupt and is being re-built.
+
+    Beyond the per-layer :class:`~repro.core.sync.CacheStats` fields
+    (which already carry the degradation counters ``disk_errors`` and
+    ``compile_fallbacks``), the program layer exports its ladder state:
+    ``program_memory_only`` (1 = the persistent store was detached
+    after repeated I/O failures — ``ProgramCache.memory_only_reason``
+    holds the why), ``program_quarantined`` (signatures whose
+    whole-program compile failed; replays run dispatched), ``program_
+    pinned`` (eviction-exempt serving hot set) and ``program_entries``
+    (resident programs).  A health snapshot built from this dict sees
+    every rung of PR 9's degradation ladder without reaching into
+    cache internals.
     """
     out: Dict[str, int] = {}
     for layer, stats in sorted(ctx.cache_stats.items()):
         for f in dataclasses.fields(stats):
             out[f"{layer}_{f.name}"] = getattr(stats, f.name)
+    pc = getattr(ctx, "program_cache", None)
+    if pc is not None:
+        out["program_entries"] = len(pc)
+        out["program_memory_only"] = int(pc.memory_only_reason is not None)
+        out["program_quarantined"] = sum(
+            len(axes) for axes in pc._quarantined.values())
+        out["program_pinned"] = len(pc.pinned)
     return out
 
 
@@ -50,9 +70,15 @@ class StepVerdict:
 
 
 class StragglerMonitor:
+    #: default verdict-history ring capacity.  The history is a
+    #: debugging/reporting surface, not the detector state (the EWMA
+    #: is O(1)); unbounded growth was an OOM for long-running servers,
+    #: which record one verdict per decode batch indefinitely.
+    HISTORY_CAP = 4096
+
     def __init__(self, alpha: float = 0.1, z_flag: float = 3.0,
                  z_skip: float = 6.0, max_skips: int = 3,
-                 warmup: int = 5):
+                 warmup: int = 5, history_cap: Optional[int] = None):
         self.alpha = alpha
         self.z_flag = z_flag
         self.z_skip = z_skip
@@ -62,7 +88,10 @@ class StragglerMonitor:
         self.var: float = 0.0
         self.n = 0
         self.consecutive_skips = 0
-        self.history: List[StepVerdict] = []
+        #: bounded ring of recent verdicts (oldest dropped first)
+        self.history: Deque[StepVerdict] = collections.deque(
+            maxlen=self.HISTORY_CAP if history_cap is None
+            else history_cap)
 
     def record(self, step: int, duration: float) -> StepVerdict:
         self.n += 1

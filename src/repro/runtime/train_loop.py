@@ -26,9 +26,10 @@ step averages parameters across pods.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +58,8 @@ class TrainLoopConfig:
     # propagates, and the (doubling) backoff before each retry
     max_restarts: int = 2
     restart_backoff: float = 0.05
+    # flight-recorder ring capacity (see StepSupervisor.ANOMALY_CAP)
+    anomaly_cap: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -83,11 +86,22 @@ class StepSupervisor:
     are bounded per RUN, not per step: a fault that keeps recurring
     must eventually surface, classified, to the operator."""
 
-    def __init__(self, max_restarts: int = 2, backoff: float = 0.05):
+    #: default flight-recorder ring capacity: the anomalies list is a
+    #: post-mortem surface, and a long-running job with a chronically
+    #: flagged straggler appends one entry per step — unbounded, that
+    #: is an OOM with extra steps; bounded, the newest (most relevant)
+    #: evidence survives
+    ANOMALY_CAP = 1024
+
+    def __init__(self, max_restarts: int = 2, backoff: float = 0.05,
+                 anomaly_cap: Optional[int] = None):
         self.max_restarts = max_restarts
         self.backoff = backoff
         self.restarts = 0
-        self.anomalies: List[Anomaly] = []
+        #: bounded ring of supervision events (oldest dropped first)
+        self.anomalies: Deque[Anomaly] = collections.deque(
+            maxlen=self.ANOMALY_CAP if anomaly_cap is None
+            else anomaly_cap)
 
     def on_verdict(self, verdict: StepVerdict) -> None:
         if verdict.action != "ok":
@@ -144,7 +158,8 @@ def train_loop(ts: TrainStep, stream: SyntheticStream,
 
     monitor = StragglerMonitor()
     supervisor = StepSupervisor(max_restarts=cfg.max_restarts,
-                                backoff=cfg.restart_backoff)
+                                backoff=cfg.restart_backoff,
+                                anomaly_cap=cfg.anomaly_cap)
     losses: List[float] = []
     step = start
     while step < cfg.steps:

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,8 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.sharding.rules import batch_specs, cache_specs, param_specs
 from repro.launch.mesh import dp_axes_of, model_axis_of
 
-__all__ = ["TrainStep", "build_train_step", "ServeStep", "build_serve_step"]
+__all__ = ["TrainStep", "build_train_step", "ServeStep", "build_serve_step",
+           "build_serve_buckets"]
 
 
 def _split_scan_layers(grads: dict, cfg: ModelConfig):
@@ -354,3 +355,20 @@ def build_serve_step(cfg: ModelConfig, mesh, *, global_batch: int,
 
     return ServeStep(step_fn=step_jit, param_sharding=p_shard,
                      cache_sharding=c_shard, rt=rt, decode_fn=decode_fn)
+
+
+def build_serve_buckets(cfg: ModelConfig, mesh,
+                        buckets: Sequence[Tuple[int, int]],
+                        **kwargs) -> Dict[Tuple[int, int], ServeStep]:
+    """Build the continuous-batching server's decode buckets: one
+    :class:`ServeStep` per ``(global_batch, cache_len)`` shape.  Each
+    bucket owns its jitted per-token step and memoized fused decode
+    variants (``decode_fn(n)``); the server routes admitted requests to
+    the bucket whose shape they fit and replays that bucket's programs.
+    Cache state is per-bucket too — buckets never share KV buffers, so
+    quarantining one bucket's fused path cannot corrupt another's."""
+    out: Dict[Tuple[int, int], ServeStep] = {}
+    for batch, cache_len in buckets:
+        out[(batch, cache_len)] = build_serve_step(
+            cfg, mesh, global_batch=batch, cache_len=cache_len, **kwargs)
+    return out

@@ -79,3 +79,29 @@ def test_ewma_not_poisoned_by_outliers():
     mean_before = m.mean
     m.record(10, 50.0)           # straggle: must not enter the EWMA
     assert m.mean == mean_before
+
+
+def test_history_is_bounded_ring():
+    """A long-running server records one verdict per decode batch; the
+    history must cap out (newest evidence kept) instead of growing
+    into an OOM."""
+    m = StragglerMonitor(warmup=0, history_cap=16)
+    for i in range(100):
+        m.record(i, 1.0)
+    assert len(m.history) == 16
+    assert [v.step for v in m.history] == list(range(84, 100))
+    assert m.n == 100                  # detector state is unaffected
+    # the default cap applies when none is given
+    assert StragglerMonitor().history.maxlen == StragglerMonitor.HISTORY_CAP
+
+
+def test_supervisor_anomalies_bounded_ring():
+    from repro.runtime.monitor import StepVerdict
+    from repro.runtime.train_loop import StepSupervisor
+    sup = StepSupervisor(anomaly_cap=8)
+    for i in range(50):
+        sup.on_verdict(StepVerdict(step=i, duration=9.0, z=7.0,
+                                   straggle=True, action="skip_sync"))
+    assert len(sup.anomalies) == 8
+    assert [a.step for a in sup.anomalies] == list(range(42, 50))
+    assert StepSupervisor().anomalies.maxlen == StepSupervisor.ANOMALY_CAP
